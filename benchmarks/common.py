@@ -1,0 +1,52 @@
+"""Shared benchmark infrastructure.
+
+All reproduction benches run the paper's datasets scaled by SCALE (CPU
+container; printed in every CSV) with budgets expressed as the paper's
+budget:requirement *ratios*, which preserves the out-of-core stress level
+exactly. The I/O model uses the paper's hardware constants
+(PAPER_GPU_SYSTEM); the roofline bench uses TPU v5e constants.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import FeatureSpec, SCHEDULERS, required_bytes
+from repro.data import (
+    SUITESPARSE_SPECS, generate_graph, normalized_adjacency, scaled_spec,
+)
+from repro.io.tiers import PAPER_GPU_SYSTEM
+from repro.sparse.formats import CSR
+
+SCALE = 1e-3
+FEATURE_DIM = 256          # paper §V-A
+FEATURE_SPARSITY = 99.0    # paper §V-A
+
+
+@functools.lru_cache(maxsize=None)
+def dataset(name: str) -> CSR:
+    spec = scaled_spec(SUITESPARSE_SPECS[name], SCALE)
+    return normalized_adjacency(generate_graph(spec, seed=0))
+
+
+def feature_spec(a: CSR, f: int = FEATURE_DIM) -> FeatureSpec:
+    return FeatureSpec(a.n_rows, f, 4, sparsity_pct=FEATURE_SPARSITY)
+
+
+def budget_for(name: str, a: CSR, feat: FeatureSpec,
+               budget_gb: float = None) -> int:
+    """Paper budget (GB) → scaled bytes via the budget:req ratio."""
+    spec = SUITESPARSE_SPECS[name]
+    gb = budget_gb if budget_gb is not None else spec.mem_constraint_gb
+    return int(gb / spec.mem_req_gb * required_bytes(a, feat))
+
+
+def run_sched(name: str, a: CSR, feat, budget: int, dataset_name: str = ""):
+    return SCHEDULERS[name](PAPER_GPU_SYSTEM, device_budget=budget).run(
+        a, feat, dataset=dataset_name)
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

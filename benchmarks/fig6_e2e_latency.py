@@ -1,0 +1,50 @@
+"""Fig. 6 — end-to-end per-epoch latency, AIRES vs baselines, 5 datasets.
+
+Paper claim: AIRES averages 1.8× / 1.7× / 1.5× over MaxMemory / UCG / ETC.
+Per-epoch = forward + backward streaming cycles of the layer chain
+(gcn_epoch with 2 hidden layers, backward_factor=2).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import (
+    FEATURE_DIM, SCALE, budget_for, csv_row, dataset, feature_spec,
+)
+from repro.core import gcn_epoch
+from repro.io.tiers import PAPER_GPU_SYSTEM
+
+DATASETS = ["rUSA", "kV2a", "kU1a", "socLJ1", "kP1a"]
+SCHEDS = ["maxmemory", "ucg", "etc", "aires"]
+
+
+def run() -> List[str]:
+    rows = [f"# fig6 per-epoch latency (scale={SCALE})"]
+    speedups = {s: [] for s in SCHEDS if s != "aires"}
+    for name in DATASETS:
+        a = dataset(name)
+        feat = feature_spec(a)
+        budget = budget_for(name, a, feat)
+        spans = {}
+        for sched in SCHEDS:
+            em = gcn_epoch(a, feat, [np.zeros((FEATURE_DIM, FEATURE_DIM))] * 2,
+                           sched, PAPER_GPU_SYSTEM, budget, dataset=name)
+            spans[sched] = em.epoch_makespan_s
+        for sched in SCHEDS:
+            sp = spans[sched] / spans["aires"]
+            if sched != "aires":
+                speedups[sched].append(sp)
+            rows.append(csv_row(
+                f"fig6/{name}/{sched}", spans[sched] * 1e6,
+                f"speedup_vs_aires_inverse={sp:.2f}"))
+    for sched, v in speedups.items():
+        rows.append(csv_row(f"fig6/avg/{sched}", 0.0,
+                            f"aires_speedup={np.mean(v):.2f}"
+                            f";paper={'1.8' if sched=='maxmemory' else '1.7' if sched=='ucg' else '1.5'}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

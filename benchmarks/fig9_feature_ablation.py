@@ -1,0 +1,38 @@
+"""Fig. 9 — per-epoch latency across GCN feature sizes 16..256.
+
+Paper claim: AIRES's speedup is consistent across model configurations.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import SCALE, budget_for, csv_row, dataset, feature_spec
+from repro.core import FeatureSpec, gcn_epoch
+from repro.io.tiers import PAPER_GPU_SYSTEM
+
+DATASET = "kV2a"
+FEATURE_SIZES = [16, 32, 64, 128, 256]
+
+
+def run() -> List[str]:
+    rows = [f"# fig9 feature-size ablation on {DATASET} (scale={SCALE})"]
+    a = dataset(DATASET)
+    for f in FEATURE_SIZES:
+        feat = feature_spec(a, f)
+        budget = budget_for(DATASET, a, feat)
+        spans = {}
+        for sched in ("maxmemory", "etc", "aires"):
+            em = gcn_epoch(a, feat, [np.zeros((f, f))] * 2, sched,
+                           PAPER_GPU_SYSTEM, budget, dataset=DATASET)
+            spans[sched] = em.epoch_makespan_s
+        rows.append(csv_row(
+            f"fig9/F{f}/aires", spans["aires"] * 1e6,
+            f"speedup_vs_maxmem={spans['maxmemory']/spans['aires']:.2f}"
+            f";vs_etc={spans['etc']/spans['aires']:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,30 @@
+"""Quickstart: the paper's technique in six lines.
+
+Out-of-core SpGEMM of a graph adjacency against dense features through the
+AIRES pipeline (Eq.5-7 planning -> RoBW partitioning -> double-buffered
+streaming -> Pallas block-ELL kernel), verified against the oracle.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import AiresConfig, AiresSpGEMM
+from repro.data import SUITESPARSE_SPECS, generate_graph, normalized_adjacency, scaled_spec
+from repro.sparse.ref_spgemm import spgemm_csr_dense
+
+# A socLJ1-like power-law graph, scaled for the CPU container.
+a = normalized_adjacency(generate_graph(scaled_spec(SUITESPARSE_SPECS["socLJ1"], 1e-4), seed=0))
+h = np.random.default_rng(0).standard_normal((a.n_rows, 32)).astype(np.float32)
+
+# Budget forces out-of-core streaming (~half the working set).
+budget = int((a.nbytes() + 2 * h.nbytes) * 0.5)
+engine = AiresSpGEMM(AiresConfig(device_budget_bytes=budget, bm=8, bk=8))
+x = engine(a, jnp.asarray(h))
+
+err = np.abs(np.asarray(x) - spgemm_csr_dense(a, h)).max()
+print(f"graph: {a.n_rows} nodes, {a.nnz} edges; "
+      f"streamed {engine.last_stream_stats.segments} RoBW segments; "
+      f"max err vs oracle = {err:.2e}")
+assert err < 1e-4
+print("OK")

@@ -1,0 +1,54 @@
+"""Architecture registry: --arch <id> resolves here.
+
+Each module defines CONFIG (full-size, from public literature) — exercised
+ONLY via the dry-run (abstract lowering) — and SMOKE (reduced same-family
+config) used by CPU tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+_ARCH_IDS: List[str] = [
+    "xlstm_125m",
+    "kimi_k2_1t_a32b",
+    "mixtral_8x22b",
+    "gemma2_27b",
+    "yi_9b",
+    "deepseek_7b",
+    "yi_6b",
+    "seamless_m4t_medium",
+    "recurrentgemma_2b",
+    "qwen2_vl_72b",
+]
+
+ALIAS = {i.replace("_", "-"): i for i in _ARCH_IDS}
+
+
+def arch_ids() -> List[str]:
+    return list(_ARCH_IDS)
+
+
+def get_config(arch: str, smoke: bool = False):
+    arch = ALIAS.get(arch, arch)
+    if arch not in _ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; known: {_ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+# Input-shape sets shared by all LM archs (assignment spec).
+SHAPES: Dict[str, dict] = {
+    "train_4k":    dict(kind="train",  seq_len=4_096,   global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32_768, global_batch=32),
+    "decode_32k":  dict(kind="decode", seq_len=32_768,  global_batch=128),
+    "long_500k":   dict(kind="decode", seq_len=524_288, global_batch=1),
+}
+
+
+def shape_applicable(arch: str, shape: str) -> tuple:
+    """(runs: bool, reason: str) — the skip rules from the assignment."""
+    cfg = get_config(arch)
+    if shape == "long_500k" and not cfg.subquadratic:
+        return False, "full-attention arch cannot decode at 500k context"
+    return True, ""

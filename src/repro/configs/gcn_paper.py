@@ -1,0 +1,24 @@
+"""The paper's own architecture: GCN with F=256 features, 99 %-sparse
+feature matrix, trained with out-of-core AIRES SpGEMM (§V-A).
+
+Not part of the assigned LM-arch registry (no train_4k/decode shapes);
+exercised by the GCN benchmarks (fig3/6/7/8/9, tableIII) and
+examples/gcn_train_e2e.py.
+"""
+from repro.models.gcn import GCNConfig
+
+CONFIG = GCNConfig(
+    name="gcn_paper",
+    feature_dim=256,
+    hidden_dims=(256, 256),
+    n_classes=64,
+    out_of_core=True,
+)
+
+SMOKE = GCNConfig(
+    name="gcn_paper_smoke",
+    feature_dim=32,
+    hidden_dims=(32,),
+    n_classes=8,
+    out_of_core=True,
+)

@@ -1,0 +1,50 @@
+"""AIRES core — the paper's primary contribution in JAX.
+
+  memory_model : Eq. (5)-(7) analytical planning
+  robw         : Algorithm 1 row block-wise alignment (+ RoBW-128)
+  scheduler    : Algorithm 2 three-phase dual-way scheduling + baselines
+  spgemm       : AiresSpGEMM public API + chained GCN epoch runner
+"""
+from repro.core.memory_model import (
+    FeatureSpec,
+    MemoryEstimate,
+    calc_mem,
+    ell_bucket_capacity,
+    estimate_output_bytes,
+    estimate_resident_bytes,
+    plan_memory,
+    plan_memory_dense_features,
+    plan_memory_spec,
+    required_bytes,
+    segment_budget,
+)
+from repro.core.robw import (
+    RoBWPlan,
+    RoBWSegment,
+    merge_partial_rows,
+    naive_partition,
+    robw_partition,
+    segments_to_block_ell,
+)
+from repro.core.scheduler import (
+    SCHEDULERS,
+    AiresScheduler,
+    ETCScheduler,
+    MaxMemoryScheduler,
+    ScheduleMetrics,
+    ScheduleResult,
+    UCGScheduler,
+)
+from repro.core.spgemm import AiresConfig, AiresSpGEMM, EpochMetrics, gcn_epoch
+
+__all__ = [
+    "FeatureSpec", "MemoryEstimate", "calc_mem", "ell_bucket_capacity",
+    "estimate_output_bytes", "estimate_resident_bytes", "plan_memory",
+    "plan_memory_dense_features", "plan_memory_spec", "required_bytes",
+    "segment_budget",
+    "RoBWPlan", "RoBWSegment", "merge_partial_rows", "naive_partition",
+    "robw_partition", "segments_to_block_ell",
+    "SCHEDULERS", "AiresScheduler", "ETCScheduler", "MaxMemoryScheduler",
+    "ScheduleMetrics", "ScheduleResult", "UCGScheduler",
+    "AiresConfig", "AiresSpGEMM", "EpochMetrics", "gcn_epoch",
+]

@@ -1,0 +1,219 @@
+"""AIRES analytical memory model — paper Eq. (5), (6), (7).
+
+The model answers, *before any data is loaded* (paper §III-B last paragraph):
+given device memory M, how much must be reserved for the resident matrix B
+(M_B, Eq. 6) and the output C (M_C, Eq. 5), and what per-segment budget p
+remains for streaming CSR A (Eq. 7)?
+
+On TPU the same model additionally chooses the BlockELL *bucket capacity*
+(ell_width): XLA's static shapes turn the paper's `cudaMalloc`-style dynamic
+allocation into capacity planning (DESIGN §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.sparse.formats import CSR, CSC
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureSpec:
+    """Shape/sparsity proxy for the feature matrix H (paper's CSC B).
+
+    The paper trains with F=256 at 99% *uniform* sparsity (§V-A), stored
+    compressed — simulate-mode schedulers only need this proxy, never the
+    values. sparsity_pct=0 models the dense-resident TPU adaptation.
+    """
+
+    n_rows: int
+    n_cols: int
+    dtype_bytes: int = 4
+    sparsity_pct: float = 0.0
+    index_bytes: int = 4
+
+    @property
+    def dense_bytes(self) -> int:
+        return self.n_rows * self.n_cols * self.dtype_bytes
+
+    @property
+    def nnz(self) -> int:
+        return int(self.dense_bytes / self.dtype_bytes
+                   * (100.0 - self.sparsity_pct) / 100.0)
+
+    @property
+    def value_bytes(self) -> int:
+        """α_B of Eq. (5)/(6)."""
+        return self.nnz * self.dtype_bytes
+
+    @property
+    def compressed_bytes(self) -> int:
+        """M_B of Eq. (6): values + column ids + row pointers."""
+        if self.sparsity_pct <= 0.0:
+            return self.dense_bytes
+        return (self.value_bytes + self.nnz * self.index_bytes
+                + (self.n_cols + 1) * self.index_bytes)
+
+    @classmethod
+    def of(cls, h) -> "FeatureSpec":
+        """Accept a FeatureSpec, a numpy array, or (n, f) tuple."""
+        if isinstance(h, cls):
+            return h
+        if hasattr(h, "shape") and hasattr(h, "dtype"):
+            return cls(h.shape[0], h.shape[1], h.dtype.itemsize, 0.0)
+        n, f = h
+        return cls(n, f)
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryEstimate:
+    m_b: float          # bytes reserved for resident matrix B (Eq. 6)
+    m_c: float          # bytes reserved for output C (Eq. 5)
+    p: float            # per-segment byte budget for streamed CSR A (Eq. 7)
+    m_total: float      # device budget
+    feasible: bool      # p > 0 — can the schedule run at all?
+
+    @property
+    def m_a(self) -> float:
+        return self.p * 3.0  # Eq. 7 inverted: segment budget covers 3 arrays
+
+
+def estimate_output_bytes(
+    alpha_a: float,
+    alpha_b: float,
+    sparsity_a_pct: float,
+    sparsity_b_pct: float,
+) -> float:
+    """Eq. (5): M_C = 3·α_A·(100−s_A)/100 · (1 + α_B/α_A + (100−s_B)/100).
+
+    α = value-array byte size of the compressed matrix, s = sparsity %.
+    The leading 3 models CSR C's three arrays (values/indices/indptr).
+    """
+    dens_a = (100.0 - sparsity_a_pct) / 100.0
+    dens_b = (100.0 - sparsity_b_pct) / 100.0
+    return 3.0 * alpha_a * dens_a * (1.0 + alpha_b / max(alpha_a, 1.0) + dens_b)
+
+
+def estimate_resident_bytes(alpha_b: float, beta_b: float, theta_b: float) -> float:
+    """Eq. (6): M_B = α_B + β_B + θ_B (values + column ids + row ids)."""
+    return alpha_b + beta_b + theta_b
+
+
+def segment_budget(m_total: float, m_c: float, m_b: float) -> float:
+    """Eq. (7): p = (M − M_C − M_B) / 3."""
+    return (m_total - m_c - m_b) / 3.0
+
+
+def plan_memory(
+    a: CSR,
+    b_nbytes_values: float,
+    b_nbytes_colid: float,
+    b_nbytes_rowid: float,
+    m_total: float,
+    sparsity_b_pct: float = 99.0,
+    index_bytes: int = 4,
+) -> MemoryEstimate:
+    """Run Eq. 5–7 for a concrete (A, B, budget) triple."""
+    alpha_a = float(a.nnz * a.data.dtype.itemsize)
+    n_total = float(a.shape[0]) * float(a.shape[1])
+    sparsity_a_pct = 100.0 * (1.0 - a.nnz / max(n_total, 1.0))
+    alpha_b = float(b_nbytes_values)
+    m_c = estimate_output_bytes(alpha_a, alpha_b, sparsity_a_pct, sparsity_b_pct)
+    m_b = estimate_resident_bytes(alpha_b, b_nbytes_colid, b_nbytes_rowid)
+    p = segment_budget(m_total, m_c, m_b)
+    return MemoryEstimate(m_b=m_b, m_c=m_c, p=p, m_total=m_total,
+                          feasible=p > 0.0)
+
+
+def plan_memory_spec(
+    a: CSR,
+    feat: "FeatureSpec",
+    m_total: float,
+    index_bytes: int = 4,
+) -> MemoryEstimate:
+    """Eq. 5-7 with compressed (or dense) feature accounting.
+
+    This is the paper-faithful path: α_A from CSR A, α_B/β_B/θ_B from the
+    compressed feature matrix, M_C from Eq. 5. With sparsity_pct=0 it
+    degrades gracefully to the dense-resident TPU mode (M_C capped at the
+    dense output footprint).
+    """
+    # Eq. 5 with α = DENSE value-array sizes, so α_A·(100−s_A)/100 recovers
+    # the compressed nnz-bytes. This reading is self-consistent for
+    # hypersparse graph adjacencies (s_A → 100%), where interpreting α as
+    # the compressed size would make M_C vanish. The resulting estimate,
+    # M_C ≈ 3·nnz_A·itemsize·(1 + F/N + dens_B), matches the expected
+    # output fill E[matches per A-nonzero] ≈ F·dens_B for uniform B.
+    itemsize = float(a.data.dtype.itemsize)
+    n_total = float(a.shape[0]) * float(a.shape[1])
+    alpha_a_dense = n_total * itemsize
+    alpha_b_dense = float(feat.dense_bytes)
+    sparsity_a_pct = 100.0 * (1.0 - a.nnz / max(n_total, 1.0))
+    m_c = estimate_output_bytes(alpha_a_dense, alpha_b_dense,
+                                sparsity_a_pct, feat.sparsity_pct)
+    if feat.sparsity_pct <= 0.0:
+        m_c = min(m_c, float(a.shape[0]) * feat.n_cols * feat.dtype_bytes)
+    m_b = float(feat.compressed_bytes)
+    p = segment_budget(m_total, m_c, m_b)
+    return MemoryEstimate(m_b=m_b, m_c=m_c, p=p, m_total=m_total,
+                          feasible=p > 0.0)
+
+
+def required_bytes(a: CSR, feat: "FeatureSpec") -> float:
+    """Table II 'Memory Req.': combined size of A, B and C."""
+    est = plan_memory_spec(a, feat, m_total=float("inf"))
+    return float(a.nbytes()) + est.m_b + est.m_c
+
+
+def plan_memory_dense_features(
+    a: CSR,
+    n_nodes: int,
+    feature_dim: int,
+    m_total: float,
+    feature_bytes: int = 4,
+    index_bytes: int = 4,
+) -> MemoryEstimate:
+    """Memory plan for GCN aggregation X = Ã·H with *dense* device features.
+
+    On TPU the feature matrix H is dense-resident (DESIGN §2 dual-path).
+    M_B = N·F·bytes; C = X is dense (N_seg, F) so Eq. 5's output model reduces
+    to the dense row-block output; we still apply Eq. 5 for the compressed
+    bookkeeping arrays AIRES keeps for chaining.
+    """
+    m_b = float(n_nodes) * feature_dim * feature_bytes
+    alpha_a = float(a.nnz * a.data.dtype.itemsize)
+    n_total = float(a.shape[0]) * float(a.shape[1])
+    sparsity_a_pct = 100.0 * (1.0 - a.nnz / max(n_total, 1.0))
+    m_c = estimate_output_bytes(alpha_a, m_b, sparsity_a_pct, 0.0)
+    # Dense-output correction: cap M_C at the dense X footprint — Eq. 5 is an
+    # upper bound for compressed C; dense C is exactly N·F.
+    m_c = min(m_c, float(a.shape[0]) * feature_dim * feature_bytes)
+    p = segment_budget(m_total, m_c, m_b)
+    return MemoryEstimate(m_b=m_b, m_c=m_c, p=p, m_total=m_total,
+                          feasible=p > 0.0)
+
+
+def calc_mem(k_rows: int, q_nnz: int, value_bytes: int = 4,
+             index_bytes: int = 4) -> int:
+    """`calcMem(k, q)` from Algorithm 1: bytes for a k-row, q-nnz CSR block.
+
+    (k+1) row pointers + q column ids + q values.
+    """
+    return (k_rows + 1) * index_bytes + q_nnz * (index_bytes + value_bytes)
+
+
+def ell_bucket_capacity(true_width: int, buckets: Optional[list] = None) -> int:
+    """Pick the BlockELL bucket ≥ true tile width (powers of two).
+
+    TPU adaptation of dynamic allocation: segments are padded to the chosen
+    bucket so recompiles only happen across buckets, not per segment.
+    """
+    if true_width <= 0:
+        return 1
+    if buckets:
+        for b in sorted(buckets):
+            if b >= true_width:
+                return b
+        return max(buckets)
+    return 1 << max(0, math.ceil(math.log2(true_width)))

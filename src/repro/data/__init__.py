@@ -1,0 +1,14 @@
+from repro.data.graphs import (
+    GraphSpec,
+    SUITESPARSE_SPECS,
+    generate_graph,
+    normalized_adjacency,
+    scaled_spec,
+)
+from repro.data.tokens import TokenPipeline, synthetic_token_batches
+
+__all__ = [
+    "GraphSpec", "SUITESPARSE_SPECS", "generate_graph",
+    "normalized_adjacency", "scaled_spec",
+    "TokenPipeline", "synthetic_token_batches",
+]

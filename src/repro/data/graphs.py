@@ -1,0 +1,128 @@
+"""Graph dataset generators matched to paper Table II statistics.
+
+SuiteSparse is unavailable offline, so we synthesize graphs with the same
+(vertices, edges, degree-distribution family) per dataset:
+  * road/kmer (rUSA, k*) — near-uniform low degree (road & GenBank de Bruijn
+    graphs have bounded degree) → uniform random regular-ish.
+  * soc-LiveJournal1 — power-law (RMAT).
+Benchmarks scale N down by `scale` (CPU container) and print the factor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Literal
+
+import numpy as np
+
+from repro.sparse.formats import COO, CSR
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphSpec:
+    name: str
+    n_vertices: int
+    n_edges: int
+    family: Literal["uniform", "powerlaw"]
+    mem_req_gb: float      # Table II "Memory Req."
+    mem_constraint_gb: float  # Table II "Memory Constraint"
+
+
+# Paper Table II, verbatim statistics.
+SUITESPARSE_SPECS: Dict[str, GraphSpec] = {
+    "rUSA":   GraphSpec("rUSA",   23_940_000, 57_700_000,  "uniform",  3.31, 3.0),
+    "kV2a":   GraphSpec("kV2a",   55_040_000, 117_210_000, "uniform",  6.87, 6.0),
+    "kU1a":   GraphSpec("kU1a",   67_710_000, 138_770_000, "uniform",  8.20, 8.0),
+    "socLJ1": GraphSpec("socLJ1",  4_840_000, 68_990_000,  "powerlaw", 12.14, 11.0),
+    "kP1a":   GraphSpec("kP1a",  139_350_000, 297_820_000, "uniform", 17.45, 16.0),
+    "kA2a":   GraphSpec("kA2a",  170_720_000, 360_580_000, "uniform", 21.18, 18.0),
+    "kV1r":   GraphSpec("kV1r",  214_000_000, 465_410_000, "uniform", 27.18, 23.0),
+}
+
+
+def scaled_spec(spec: GraphSpec, scale: float) -> GraphSpec:
+    """Scale vertices/edges down by `scale`, keeping degree structure."""
+    return dataclasses.replace(
+        spec,
+        n_vertices=max(64, int(spec.n_vertices * scale)),
+        n_edges=max(128, int(spec.n_edges * scale)),
+        mem_req_gb=spec.mem_req_gb * scale,
+        mem_constraint_gb=spec.mem_constraint_gb * scale,
+    )
+
+
+def _uniform_edges(n: int, m: int, rng: np.random.Generator):
+    rows = rng.integers(0, n, size=m, dtype=np.int64)
+    # Road/kmer locality: most edges connect nearby ids (bandable matrix).
+    span = max(1, n // 64)
+    offs = rng.integers(-span, span + 1, size=m, dtype=np.int64)
+    cols = np.clip(rows + offs, 0, n - 1)
+    return rows, cols
+
+
+def _rmat_edges(n: int, m: int, rng: np.random.Generator,
+                a=0.57, b=0.19, c=0.19):
+    """RMAT power-law generator (socLJ1-like)."""
+    scale = int(np.ceil(np.log2(max(n, 2))))
+    rows = np.zeros(m, dtype=np.int64)
+    cols = np.zeros(m, dtype=np.int64)
+    for bit in range(scale):
+        r = rng.random(m)
+        quad_b = (r >= a) & (r < a + b)
+        quad_c = (r >= a + b) & (r < a + b + c)
+        quad_d = r >= a + b + c
+        rows = rows * 2 + (quad_c | quad_d)
+        cols = cols * 2 + (quad_b | quad_d)
+    return rows % n, cols % n
+
+
+def generate_graph(spec: GraphSpec, seed: int = 0,
+                   dtype=np.float32) -> CSR:
+    """Adjacency CSR with spec's vertex/edge counts and degree family."""
+    rng = np.random.default_rng(seed)
+    n, m = spec.n_vertices, spec.n_edges
+    if spec.family == "powerlaw":
+        rows, cols = _rmat_edges(n, m, rng)
+    else:
+        rows, cols = _uniform_edges(n, m, rng)
+    data = np.ones(m, dtype=dtype)
+    coo = COO(rows=rows, cols=cols, data=data, shape=(n, n))
+    a = coo.to_csr()
+    # Deduplicate parallel edges (keep structure simple & exact).
+    dedup_indices = []
+    dedup_data = []
+    indptr = [0]
+    for i in range(n):
+        lo, hi = a.indptr[i], a.indptr[i + 1]
+        cols_i = np.unique(a.indices[lo:hi])
+        dedup_indices.append(cols_i)
+        dedup_data.append(np.ones(cols_i.shape[0], dtype=dtype))
+        indptr.append(indptr[-1] + cols_i.shape[0])
+    return CSR(
+        indptr=np.asarray(indptr, dtype=np.int64),
+        indices=np.concatenate(dedup_indices) if dedup_indices else np.empty(0, np.int64),
+        data=np.concatenate(dedup_data) if dedup_data else np.empty(0, dtype),
+        shape=(n, n),
+    )
+
+
+def normalized_adjacency(a: CSR) -> CSR:
+    """Ã = D̂^{-1/2} (A + I) D̂^{-1/2} — paper Eq. (2), kept in CSR."""
+    n = a.n_rows
+    # A + I
+    rows = []
+    for i in range(n):
+        lo, hi = a.indptr[i], a.indptr[i + 1]
+        cols = a.indices[lo:hi]
+        if i not in cols:
+            cols = np.sort(np.append(cols, i))
+        rows.append(cols)
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    indptr[1:] = np.cumsum([r.shape[0] for r in rows])
+    indices = np.concatenate(rows)
+    deg = np.diff(indptr).astype(np.float64)
+    dinv = 1.0 / np.sqrt(np.maximum(deg, 1.0))
+    data = np.empty(indices.shape[0], dtype=a.data.dtype)
+    for i in range(n):
+        lo, hi = indptr[i], indptr[i + 1]
+        data[lo:hi] = (dinv[i] * dinv[indices[lo:hi]]).astype(a.data.dtype)
+    return CSR(indptr=indptr, indices=indices, data=data, shape=a.shape)

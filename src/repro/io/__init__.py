@@ -1,0 +1,14 @@
+from repro.io.tiers import (
+    MemoryTier,
+    TierSpec,
+    TieredMemorySystem,
+    TransferRecord,
+    PAPER_GPU_SYSTEM,
+    TPU_V5E_SYSTEM,
+)
+from repro.io.streamer import DoubleBufferedStreamer
+
+__all__ = [
+    "MemoryTier", "TierSpec", "TieredMemorySystem", "TransferRecord",
+    "PAPER_GPU_SYSTEM", "TPU_V5E_SYSTEM", "DoubleBufferedStreamer",
+]

@@ -1,0 +1,100 @@
+"""Double-buffered host→device streamer (Phase II of Alg. 2).
+
+JAX's async dispatch is the TPU-native version of CUDA stream overlap: while
+the device executes the segment-k kernel, `jax.device_put` of segment k+1
+proceeds concurrently. `DoubleBufferedStreamer` provides prefetch-ahead
+iteration, straggler re-issue, and per-segment accounting; it is shared by
+the AIRES SpGEMM scheduler and the out-of-core weight provider (MoE experts,
+embeddings).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterable, Iterator, List, Optional
+
+import jax
+
+
+@dataclasses.dataclass
+class StreamStats:
+    segments: int = 0
+    put_seconds: float = 0.0       # wall time blocked on device_put dispatch
+    compute_seconds: float = 0.0   # wall time blocked on result readiness
+    reissues: int = 0              # straggler mitigations
+
+
+class DoubleBufferedStreamer:
+    """Prefetch-ahead pipeline over host segments.
+
+    produce(i) -> host payload (numpy arrays / pytrees)
+    upload(payload) -> device payload (typically jax.device_put with sharding)
+    consume(device_payload, i) -> result (device computation, async)
+
+    depth=2 is classic double buffering (paper Phase II); larger depths
+    pipeline deeper when segments are small. A deadline (seconds) per
+    segment triggers re-issue of the upload — the straggler mitigation used
+    in multi-host deployments where a slow host NIC stalls one pipeline.
+    """
+
+    def __init__(
+        self,
+        upload: Callable[[Any], Any],
+        consume: Callable[[Any, int], Any],
+        depth: int = 2,
+        deadline_s: Optional[float] = None,
+        max_reissue: int = 1,
+    ):
+        if depth < 1:
+            raise ValueError("depth must be >= 1")
+        self.upload = upload
+        self.consume = consume
+        self.depth = depth
+        self.deadline_s = deadline_s
+        self.max_reissue = max_reissue
+        self.stats = StreamStats()
+
+    def _upload_with_deadline(self, payload: Any) -> Any:
+        t0 = time.perf_counter()
+        dev = self.upload(payload)
+        if self.deadline_s is not None:
+            for _ in range(self.max_reissue):
+                if time.perf_counter() - t0 <= self.deadline_s:
+                    break
+                # Straggler: re-issue the transfer (idempotent device_put).
+                self.stats.reissues += 1
+                t0 = time.perf_counter()
+                dev = self.upload(payload)
+        self.stats.put_seconds += time.perf_counter() - t0
+        return dev
+
+    def run(self, payloads: Iterable[Any]) -> Iterator[Any]:
+        """Yield consume() results in order, depth-deep pipelined."""
+        it = iter(payloads)
+        inflight: List[Any] = []
+        # Prime the pipeline.
+        for payload in it:
+            inflight.append(self._upload_with_deadline(payload))
+            if len(inflight) >= self.depth:
+                break
+        i = 0
+        while inflight:
+            dev = inflight.pop(0)
+            t0 = time.perf_counter()
+            result = self.consume(dev, i)
+            self.stats.compute_seconds += time.perf_counter() - t0
+            self.stats.segments += 1
+            # Refill the pipeline before blocking on the result.
+            try:
+                nxt = next(it)
+                inflight.append(self._upload_with_deadline(nxt))
+            except StopIteration:
+                pass
+            yield result
+            i += 1
+
+    def run_all(self, payloads: Iterable[Any]) -> List[Any]:
+        out = list(self.run(payloads))
+        # Block once at the end (paper Phase III store) rather than per segment.
+        jax.block_until_ready([o for o in out if o is not None])
+        return out

@@ -1,0 +1,174 @@
+"""Tiered memory system: device HBM / host DRAM / secondary storage.
+
+The paper's three tiers are GPU HBM, host memory and NVMe (+GDS path). We
+model the same topology with two parameterizations:
+
+  * PAPER_GPU_SYSTEM — RTX 4090-class constants used by the reproduction
+    benchmarks (fig6/7/8, tableIII), matching the paper's own simulation
+    methodology (§V-A: "We model the I/O transfer operations ... with
+    simulations").
+  * TPU_V5E_SYSTEM — the deployment target used by the roofline analysis:
+    197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI, PCIe-attached host.
+
+Every transfer is accounted (bytes, path, modeled seconds) so benchmarks can
+produce the Fig. 7/8 breakdowns; *real* wall-clock host preprocessing (RoBW
+partitioning, merging) is measured, not modeled, mirroring the paper's split
+between measured CPU work and profiled I/O.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+
+class MemoryTier(enum.Enum):
+    DEVICE = "device"    # GPU HBM / TPU HBM
+    HOST = "host"        # CPU DRAM
+    STORAGE = "storage"  # NVMe SSD
+
+
+class Path(enum.Enum):
+    """Transfer path; bandwidth differs per path (paper Fig. 8)."""
+
+    DMA = "dma"              # host <-> device over PCIe (cudaMemcpy HtoD/DtoH)
+    GDS = "gds"              # storage <-> device direct (GPU Direct Storage)
+    STORAGE_HOST = "sio"     # storage <-> host over PCIe
+    UM = "um"                # unified-memory page faults (UCG baseline)
+    ICI = "ici"              # inter-chip interconnect (TPU only)
+
+
+@dataclasses.dataclass(frozen=True)
+class TierSpec:
+    """Capacities in bytes, bandwidths in bytes/second."""
+
+    device_capacity: int
+    host_capacity: int
+    storage_capacity: int
+    bw: Dict[Path, float]
+    latency_s: Dict[Path, float]  # fixed per-transfer setup cost
+    hbm_bw: float = 1.0e12        # device memory bandwidth (SpGEMM is bound by it)
+    host_memcpy_bw: float = 12e9  # effective single-stream DRAM copy bandwidth
+    host_op_latency_s: float = 2e-6  # per host staging/merge event
+
+
+def _mk(caps, bw_gbs, lat_us, hbm_bw, host_bw=12e9) -> TierSpec:
+    return TierSpec(
+        device_capacity=caps[0], host_capacity=caps[1], storage_capacity=caps[2],
+        bw={p: g * 1e9 for p, g in bw_gbs.items()},
+        latency_s={p: u * 1e-6 for p, u in lat_us.items()},
+        hbm_bw=hbm_bw, host_memcpy_bw=host_bw,
+    )
+
+
+# RTX 4090 (24 GB, 1008 GB/s) + i9-13900KF (128 GB DDR5) + M.2 NVMe, PCIe gen4.
+PAPER_GPU_SYSTEM = _mk(
+    (24 << 30, 128 << 30, 2 << 40),
+    {Path.DMA: 22.0, Path.GDS: 6.0, Path.STORAGE_HOST: 6.5, Path.UM: 9.0},
+    {Path.DMA: 8.0, Path.GDS: 25.0, Path.STORAGE_HOST: 20.0, Path.UM: 4.0},
+    hbm_bw=1008e9,
+)
+
+# TPU v5e chip: 16 GB HBM @ 819 GB/s; host over PCIe; ICI ~50 GB/s/link.
+TPU_V5E_SYSTEM = _mk(
+    (16 << 30, 512 << 30, 16 << 40),
+    {Path.DMA: 32.0, Path.GDS: 8.0, Path.STORAGE_HOST: 8.0, Path.UM: 8.0,
+     Path.ICI: 50.0},
+    {Path.DMA: 5.0, Path.GDS: 20.0, Path.STORAGE_HOST: 20.0, Path.UM: 4.0,
+     Path.ICI: 1.0},
+    hbm_bw=819e9,
+)
+
+
+@dataclasses.dataclass
+class TransferRecord:
+    path: Path
+    src: MemoryTier
+    dst: MemoryTier
+    nbytes: int
+    seconds: float
+    tag: str = ""
+
+
+class OutOfMemory(RuntimeError):
+    """Raised when a tier allocation exceeds capacity (Table III '-')."""
+
+
+class TieredMemorySystem:
+    """Accounting simulator for the three-tier hierarchy.
+
+    Allocations are tracked per tier; transfers append TransferRecords with
+    modeled latency = setup + bytes/bw. Channels are independent (dual-way:
+    a GDS transfer and a DMA transfer overlap — busy-time is kept per path so
+    schedulers can compute overlapped makespans, Fig. 5).
+    """
+
+    def __init__(self, spec: TierSpec):
+        self.spec = spec
+        self.used: Dict[MemoryTier, int] = {t: 0 for t in MemoryTier}
+        self.allocs: Dict[Tuple[MemoryTier, str], int] = {}
+        self.transfers: List[TransferRecord] = []
+        self.busy_s: Dict[Path, float] = defaultdict(float)
+
+    # ---- allocation -----------------------------------------------------
+    def _capacity(self, tier: MemoryTier) -> int:
+        return {
+            MemoryTier.DEVICE: self.spec.device_capacity,
+            MemoryTier.HOST: self.spec.host_capacity,
+            MemoryTier.STORAGE: self.spec.storage_capacity,
+        }[tier]
+
+    def alloc(self, tier: MemoryTier, name: str, nbytes: int) -> None:
+        key = (tier, name)
+        new_used = self.used[tier] - self.allocs.get(key, 0) + nbytes
+        if new_used > self._capacity(tier):
+            raise OutOfMemory(
+                f"{tier.value}: need {new_used/2**30:.2f} GiB "
+                f"> capacity {self._capacity(tier)/2**30:.2f} GiB ({name})")
+        self.used[tier] = new_used
+        self.allocs[key] = nbytes
+
+    def free(self, tier: MemoryTier, name: str) -> None:
+        key = (tier, name)
+        self.used[tier] -= self.allocs.pop(key, 0)
+
+    def headroom(self, tier: MemoryTier) -> int:
+        return self._capacity(tier) - self.used[tier]
+
+    # ---- transfer -------------------------------------------------------
+    def transfer(self, path: Path, src: MemoryTier, dst: MemoryTier,
+                 nbytes: int, tag: str = "") -> float:
+        bw = self.spec.bw[path]
+        secs = self.spec.latency_s[path] + nbytes / bw
+        self.transfers.append(TransferRecord(path, src, dst, nbytes, secs, tag))
+        self.busy_s[path] += secs
+        return secs
+
+    # ---- reporting (Fig. 7 / Fig. 8) ------------------------------------
+    def bytes_by_path(self) -> Dict[Path, int]:
+        out: Dict[Path, int] = defaultdict(int)
+        for t in self.transfers:
+            out[t.path] += t.nbytes
+        return dict(out)
+
+    def seconds_by_path(self) -> Dict[Path, float]:
+        out: Dict[Path, float] = defaultdict(float)
+        for t in self.transfers:
+            out[t.path] += t.seconds
+        return dict(out)
+
+    def total_bytes(self) -> int:
+        return sum(t.nbytes for t in self.transfers)
+
+    def makespan_overlapped(self) -> float:
+        """Dual-way makespan: independent channels run concurrently."""
+        return max(self.busy_s.values(), default=0.0)
+
+    def makespan_serial(self) -> float:
+        """Single-path makespan (baselines without dual-way transfer)."""
+        return sum(self.busy_s.values())
+
+    def reset_accounting(self) -> None:
+        self.transfers.clear()
+        self.busy_s.clear()

@@ -1,0 +1,84 @@
+"""Out-of-core weight streaming — the AIRES engine applied to parameters.
+
+The paper's dual-way schedule generalizes beyond SpGEMM operands: for a
+384-expert MoE whose expert bank exceeds HBM, expert weight bricks play the
+role of CSR-A segments (aligned, complete-expert blocks — the RoBW
+invariant "never split a row" becomes "never split an expert"), while the
+router/attention weights stay resident like CSC-B. Phase II double-buffers
+expert uploads against the previous layer's compute.
+
+This module provides the host-side registry + prefetch iterator; the
+launcher uses it when `config.stream_weights=True` (kimi-k2). On the real
+pod the upload path is host DRAM → HBM DMA; here it is exercised with
+jax.device_put (CPU) for tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.memory_model import ell_bucket_capacity
+from repro.io.streamer import DoubleBufferedStreamer
+
+
+@dataclasses.dataclass
+class ExpertBank:
+    """Host-resident expert parameters for one layer: dict of (E, ...) arrays."""
+
+    layer: int
+    arrays: Dict[str, np.ndarray]   # e.g. w_gate (E, d, f), w_up, w_down
+
+    @property
+    def n_experts(self) -> int:
+        return next(iter(self.arrays.values())).shape[0]
+
+    def expert_bytes(self) -> int:
+        return sum(a[0].nbytes for a in self.arrays.values())
+
+    def slice_experts(self, ids: Sequence[int]) -> Dict[str, np.ndarray]:
+        idx = np.asarray(ids)
+        return {k: a[idx] for k, a in self.arrays.items()}
+
+
+class StreamedWeightProvider:
+    """RoBW-for-experts: group experts into aligned blocks that fit the
+    per-step HBM budget, stream them double-buffered across layers."""
+
+    def __init__(self, banks: List[ExpertBank], hbm_budget_bytes: int,
+                 align: int = 8, depth: int = 2,
+                 deadline_s: Optional[float] = None):
+        self.banks = banks
+        self.align = align
+        per_expert = banks[0].expert_bytes() if banks else 1
+        per_block = max(1, hbm_budget_bytes // max(per_expert, 1))
+        # Complete, aligned expert blocks (the RoBW invariant).
+        self.block_size = max(align, (per_block // align) * align)
+        self.depth = depth
+        self.deadline_s = deadline_s
+
+    def blocks_for(self, bank: ExpertBank) -> List[Tuple[int, int]]:
+        e = bank.n_experts
+        return [(s, min(s + self.block_size, e))
+                for s in range(0, e, self.block_size)]
+
+    def stream_layer(self, bank: ExpertBank) -> Iterator:
+        """Yield device-resident expert blocks for one layer, prefetched."""
+        blocks = self.blocks_for(bank)
+
+        def produce():
+            for (s, e) in blocks:
+                yield (s, e), bank.slice_experts(range(s, e))
+
+        def upload(payload):
+            (s, e), arrays = payload
+            return (s, e), {k: jax.device_put(v) for k, v in arrays.items()}
+
+        def consume(dev_payload, i):
+            return dev_payload
+
+        streamer = DoubleBufferedStreamer(upload, consume, depth=self.depth,
+                                          deadline_s=self.deadline_s)
+        yield from streamer.run(produce())

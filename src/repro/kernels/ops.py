@@ -1,0 +1,142 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handle padding/layout so callers pass natural shapes; pick interpret mode
+automatically on CPU (the container target) while lowering to real Mosaic
+on TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import bcsr_spmm as _bcsr
+from repro.kernels import decode_attn as _dec
+from repro.kernels import flash_attn as _flash
+from repro.sparse.formats import BlockELL
+
+
+def _on_cpu() -> bool:
+    return jax.devices()[0].platform == "cpu"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    target = ((size + multiple - 1) // multiple) * multiple
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads)
+
+
+def bcsr_spmm(
+    ell: BlockELL,
+    h: jax.Array,
+    *,
+    bn: int = 128,
+    interpret: Optional[bool] = None,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """X = A @ H for a BlockELL segment of A and dense H (n_cols, F).
+
+    Returns (ell.n_rows, F) — padding rows/cols are stripped.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    f = h.shape[1]
+    bn = min(bn, ((f + 127) // 128) * 128)
+    h_pad = _pad_to(_pad_to(jnp.asarray(h), 0, ell.bk), 1, bn)
+    # Segment column coverage may exceed h rows when A is wider than H rows
+    # (never in GCN aggregation: A is n×n, H is n×f).
+    need_k = int(np.max(ell.col_tile, initial=0) + 1) * ell.bk
+    if h_pad.shape[0] < need_k:
+        h_pad = jnp.pad(h_pad, ((0, need_k - h_pad.shape[0]), (0, 0)))
+    out = _bcsr.bcsr_spmm_pallas(
+        jnp.asarray(ell.blocks),
+        jnp.asarray(ell.col_tile),
+        jnp.asarray(ell.n_tiles),
+        h_pad,
+        bm=ell.bm,
+        bk=ell.bk,
+        bn=bn,
+        interpret=interpret,
+        out_dtype=out_dtype,
+    )
+    return out[: ell.n_rows, :f]
+
+
+def fused_gcn_layer(
+    ell: BlockELL,
+    h: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    interpret: Optional[bool] = None,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """σ((A @ H) @ W + b) fused per row block — Fig. 1 chain without
+    materializing X in HBM."""
+    if interpret is None:
+        interpret = _on_cpu()
+    f = h.shape[1]
+    h_pad = _pad_to(jnp.asarray(h), 0, ell.bk)
+    need_k = int(np.max(ell.col_tile, initial=0) + 1) * ell.bk
+    if h_pad.shape[0] < need_k:
+        h_pad = jnp.pad(h_pad, ((0, need_k - h_pad.shape[0]), (0, 0)))
+    out = _bcsr.fused_gcn_layer_pallas(
+        jnp.asarray(ell.blocks),
+        jnp.asarray(ell.col_tile),
+        jnp.asarray(ell.n_tiles),
+        h_pad,
+        jnp.asarray(w),
+        jnp.asarray(b),
+        bm=ell.bm,
+        bk=ell.bk,
+        interpret=interpret,
+        out_dtype=out_dtype,
+    )
+    return out[: ell.n_rows]
+
+
+def decode_attention(
+    q: jax.Array,       # (B, n_q_heads, d)
+    k: jax.Array,       # (B, n_kv_heads, S, d)
+    v: jax.Array,       # (B, n_kv_heads, S, d)
+    lens: jax.Array,    # (B,) int32
+    *,
+    block_s: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """GQA flash-decode. Returns (B, n_q_heads, d)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    b_sz, n_q, d = q.shape
+    n_kv = k.shape[1]
+    group = n_q // n_kv
+    qg = q.reshape(b_sz, n_kv, group, d)
+    s = k.shape[2]
+    block_s = min(block_s, s)
+    k_pad = _pad_to(k, 2, block_s)
+    v_pad = _pad_to(v, 2, block_s)
+    out = _dec.decode_attention_pallas(
+        qg, k_pad, v_pad, lens.astype(jnp.int32),
+        block_s=block_s, interpret=interpret)
+    return out.reshape(b_sz, n_q, d)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: Optional[bool] = None):
+    """Causal/windowed flash attention (B, H, S, d) — prefill hot spot."""
+    if interpret is None:
+        interpret = _on_cpu()
+    s_len = q.shape[2]
+    block_q = min(block_q, s_len)
+    block_k = min(block_k, s_len)
+    return _flash.flash_attention_pallas(
+        q, k, v, block_q=block_q, block_k=block_k, causal=causal,
+        window=window, interpret=interpret)

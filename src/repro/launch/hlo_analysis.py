@@ -1,0 +1,72 @@
+"""Collective-traffic extraction from lowered/compiled HLO text.
+
+cost_analysis() has no collective-bytes entry, so the roofline's third term
+comes from parsing the (per-device, post-SPMD-partitioning) HLO: sum the
+result-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute. Async pairs (-start/-done) are counted
+once via the -start op.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# `%name = <shape-or-tuple> <op>(` — shape like bf16[8,128]{1,0} or a tuple.
+_OP_RE = re.compile(
+    r"=\s*(\([^=]*?\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+# XLA:CPU's AllReducePromotion pass rewrites bf16/f16 all-reduces to
+# convert→f32-all-reduce→convert (the reducer computation gets a
+# "_promoted" suffix). XLA:TPU reduces bf16 natively, so for the TPU-target
+# roofline those ops are counted at their pre-promotion width.
+_PROMOTED_RE = re.compile(r"to_apply=%\S*promoted")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str,
+                     undo_cpu_promotion: bool = True) -> Tuple[int, Dict[str, int]]:
+    """Total per-device collective bytes + per-op-kind breakdown."""
+    by_kind: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_text, kind, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue  # counted at -start
+        nbytes = _shape_bytes(shape_text)
+        if (undo_cpu_promotion and kind == "all-reduce"
+                and "f32" in shape_text and _PROMOTED_RE.search(line)):
+            nbytes //= 2  # bf16 on the TPU wire
+        by_kind[kind] += nbytes
+    return sum(by_kind.values()), dict(by_kind)
+
+
+def collective_count(hlo_text: str) -> int:
+    return sum(1 for m in _OP_RE.finditer(hlo_text) if m.group(3) != "-done")

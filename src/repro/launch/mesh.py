@@ -1,0 +1,26 @@
+"""Production mesh factory.
+
+Defined as functions (never module-level constants) so importing this
+module does not touch jax device state — jax locks the device count on
+first backend initialization, and only dryrun.py sets the 512-device flag.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 (data, model) single pod; 2×16×16 (pod, data, model) for two
+    pods = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    """The axes a batch dimension shards over."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis(mesh) -> str:
+    return "model"

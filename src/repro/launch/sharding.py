@@ -1,0 +1,215 @@
+"""Sharding rules: param/activation/state PartitionSpecs for any mesh.
+
+Generic, divisibility-checked rules — the same policy MaxText-class
+frameworks use, expressed as name-pattern preferences with automatic
+fallback so every assigned architecture compiles on the production mesh:
+
+  * 2D weights: columns over "model" (TP), rows over ("pod","data") (FSDP/
+    ZeRO — optimizer state shards with the params, which is what makes
+    AdamW on a 72B model fit 512×16 GB).
+  * MoE expert banks (E, d, f): experts over "model" (EP) when E divides,
+    else tensor-parallel inside the expert; d over data axes.
+  * embeddings: vocab over "model" when divisible (sharded softmax), else
+    d_model.
+  * norms/scalars: replicated.
+  * KV caches: batch over data axes, kv-heads over "model" when divisible,
+    else head_dim.
+
+Preference order is tried first; any dim that does not divide falls back
+(None) — compile success is guaranteed, performance is the hillclimb's job.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+DATA_AXES = ("pod", "data")
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        out = 1
+        for a in axis:
+            out *= _axis_size(mesh, a)
+        return out
+    return mesh.shape[axis] if axis in mesh.axis_names else 0
+
+
+def _fit(mesh: Mesh, shape: Sequence[int], spec: Sequence) -> Optional[P]:
+    """Return P(spec) with non-dividing axes dropped; None if axis missing."""
+    out = []
+    for dim, axis in zip(shape, spec):
+        size = _axis_size(mesh, axis)
+        if size == 0:
+            # axis not in this mesh (e.g. "pod" on single-pod): drop it
+            if isinstance(axis, (tuple, list)):
+                kept = tuple(a for a in axis if a in mesh.axis_names)
+                size = _axis_size(mesh, kept)
+                axis = kept if kept else None
+            else:
+                axis = None
+                size = 1
+        if size > 1 and dim % size == 0:
+            out.append(axis if not isinstance(axis, (tuple, list))
+                       else tuple(axis))
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# Sentinel: shard over data axes only in FSDP mode (params too big to
+# replicate across the data dimension), else replicate. Optimizer state
+# always resolves FSDP=True (ZeRO-1: moments shard over data even when the
+# params replicate — grads reduce-scatter into the update, updated params
+# all-gather once per step instead of per layer).
+FSDP = "__fsdp__"
+
+# (regex on param path, ordered spec preferences per rank) — first rule
+# match wins; within a rule, the first preference whose sharded dims all
+# divide wins; else the last preference is per-dim fitted.
+_PARAM_RULES: List[Tuple[str, Dict[int, Sequence]]] = [
+    # MoE expert banks: EP over model preferred; when E doesn't divide the
+    # model axis (mixtral's 8 experts on 16-way TP), tensor-parallel inside
+    # the expert instead — never shard only the contracting dim.
+    (r"moe/w_(gate|up)$",   {3: [("model", FSDP, None), (None, FSDP, "model")]}),
+    (r"moe/w_down$",        {3: [("model", None, FSDP), (None, "model", FSDP)]}),
+    (r"moe/w_router$",      {2: [(FSDP, None)]}),
+    # Attention projections: column-parallel in, row-parallel out.
+    (r"(attn|xattn)/w[qkv]$", {2: [(FSDP, "model")]}),
+    (r"(attn|xattn)/wo$",     {2: [("model", FSDP)]}),
+    # Dense MLP.
+    (r"mlp/w_(gate|up)$",   {2: [(FSDP, "model")]}),
+    (r"mlp/w_down$",        {2: [("model", FSDP)]}),
+    # Recurrent blocks.
+    (r"mlstm/w[qkv]$",      {2: [(FSDP, "model")]}),
+    (r"mlstm/w[if]$",       {2: [(FSDP, None)]}),
+    (r"mlstm/wo$",          {2: [("model", FSDP)]}),
+    (r"slstm/(wz|wi_g|wf_g|wo_g)$", {2: [(FSDP, "model")]}),
+    (r"slstm/r[zifo]$",     {2: [(FSDP, "model")]}),
+    (r"slstm/wo$",          {2: [("model", FSDP)]}),
+    (r"rec/w_branch_(gate|lin)$", {2: [(FSDP, "model")]}),
+    (r"rec/w_(rec|in)_gate$",     {2: [(FSDP, "model")]}),
+    (r"rec/w_out$",         {2: [("model", FSDP)]}),
+    (r"rec/conv_w$",        {2: [(None, "model")]}),
+    (r"rec/(conv_b|lambda)$", {1: [("model",)]}),
+    # Embeddings / head: vocab over model (sharded softmax) preferred.
+    (r"embed$",             {2: [("model", None)]}),
+    (r"lm_head$",           {2: [(None, "model")]}),
+    (r"(vision|audio)_proj$", {2: [(FSDP, "model")]}),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _resolve(spec: Sequence, fsdp: bool) -> Sequence:
+    return [DATA_AXES if a == FSDP and fsdp
+            else (None if a == FSDP else a) for a in spec]
+
+
+def _fully_fits(mesh: Mesh, shape, spec) -> bool:
+    fitted = _fit(mesh, shape, spec)
+    want = [a for a in spec if a is not None]
+    got = [a for a in fitted if a is not None]
+    return len(want) == len(got)
+
+
+def param_pspec(path: str, shape: Sequence[int], mesh: Mesh,
+                fsdp: bool = False) -> P:
+    rank = len(shape)
+    for pattern, by_rank in _PARAM_RULES:
+        if re.search(pattern, path) and rank in by_rank:
+            prefs = [_resolve(p, fsdp) for p in by_rank[rank]]
+            for pref in prefs:
+                if _fully_fits(mesh, shape, pref):
+                    return _fit(mesh, shape, pref)
+            return _fit(mesh, shape, prefs[-1])
+    if rank >= 2:
+        spec = [None] * rank
+        spec[0] = DATA_AXES if fsdp else None
+        spec[-1] = "model"
+        fitted = _fit(mesh, shape, spec)
+        if all(a is None for a in fitted):
+            spec2 = [None] * rank
+            spec2[0] = "model"
+            return _fit(mesh, shape, spec2)
+        return fitted
+    return P(*([None] * rank))
+
+
+def tree_pspecs(tree, mesh: Mesh, fsdp: bool = False):
+    """Pytree of PartitionSpecs matching `tree` (of arrays or SDS)."""
+    def fn(path, leaf):
+        return param_pspec(_path_str(path), leaf.shape, mesh, fsdp=fsdp)
+    return jax.tree_util.tree_map_with_path(fn, tree)
+
+
+def tree_shardings(tree, mesh: Mesh, fsdp: bool = False):
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec),
+        tree_pspecs(tree, mesh, fsdp=fsdp))
+
+
+def batch_pspec(shape: Sequence[int], mesh: Mesh) -> P:
+    """Batch arrays: leading dim over data axes when divisible."""
+    spec = [None] * len(shape)
+    spec[0] = DATA_AXES
+    return _fit(mesh, shape, spec)
+
+
+def opt_state_pspecs(opt_state, param_specs, mesh: Mesh):
+    """Optimizer moments shard with ZeRO-1 semantics: always the FSDP
+    variant of their parameter's rule (moments shard over data even when
+    params replicate — GSPMD turns the update into reduce-scatter +
+    one all-gather of updated params per step). Scalars replicate."""
+    out = {}
+    for key, sub in opt_state.items():
+        if key == "step":
+            out[key] = P()
+            continue
+        if key in ("m", "v", "stats"):
+            def fn(path, leaf):
+                return param_pspec(_path_str(path), leaf.shape, mesh,
+                                   fsdp=True)
+            out[key] = jax.tree_util.tree_map_with_path(fn, sub)
+            continue
+        out[key] = jax.tree_util.tree_map(lambda _: P(), sub)
+    return out
+
+
+def state_pspecs(state, mesh: Mesh):
+    """Decode-state sharding: caches (B, hkv, S, hd) → batch over data,
+    kv-heads over model when divisible else head_dim; recurrent states
+    (B, ...) → batch over data, trailing dim over model."""
+    def fn(path, leaf):
+        shape = leaf.shape
+        if len(shape) == 4:   # kv cache
+            spec = [DATA_AXES, "model", None, None]
+            fitted = _fit(mesh, shape, spec)
+            if fitted[1] is None:
+                fitted = _fit(mesh, shape, [DATA_AXES, None, None, "model"])
+            return fitted
+        if len(shape) == 0:
+            return P()
+        spec = [None] * len(shape)
+        spec[0] = DATA_AXES
+        if len(shape) >= 2:
+            spec[-1] = "model"
+        return _fit(mesh, shape, spec)
+    return jax.tree_util.tree_map_with_path(fn, state)

@@ -1,0 +1,55 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, and never allocating — the dry-run lowers
+against these. Modality frontends are stubs per the assignment: audio/vlm
+cells receive precomputed frame/patch embeddings here.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+
+
+def input_specs(cfg: ArchConfig, shape: Dict[str, Any]) -> Dict[str, Any]:
+    """shape: {"kind": train|prefill|decode, "seq_len": int, "global_batch": int}."""
+    b = shape["global_batch"]
+    s = shape["seq_len"]
+    kind = shape["kind"]
+    act_dt = jnp.dtype(cfg.dtype)
+
+    if kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        if cfg.n_vision_tokens:
+            specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_vision_tokens, cfg.d_model), act_dt)
+        if cfg.is_enc_dec:
+            specs["audio_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.audio_frames, cfg.d_model), act_dt)
+        return specs
+
+    if kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.n_vision_tokens:
+            specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_vision_tokens, cfg.d_model), act_dt)
+        if cfg.is_enc_dec:
+            specs["audio_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.audio_frames, cfg.d_model), act_dt)
+        return specs
+
+    if kind == "decode":
+        # One new token against a KV/recurrent state of length seq_len.
+        specs = {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+        if cfg.is_enc_dec:
+            specs["enc_out"] = jax.ShapeDtypeStruct(
+                (b, cfg.audio_frames, cfg.d_model), act_dt)
+        return specs
+
+    raise ValueError(f"unknown shape kind {kind!r}")

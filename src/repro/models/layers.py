@@ -1,0 +1,269 @@
+"""Transformer building blocks: norms, RoPE/M-RoPE, GQA attention, MLP, MoE.
+
+Conventions:
+  * params are dicts of jnp arrays; weights stored (in_dim, out_dim).
+  * activations (B, S, D); attention internals (B, H, S, hd).
+  * every function takes `cfg` first and is jit-friendly (no python state).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+
+
+def matmul(a: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Matmul whose accumulator dtype follows the activation dtype.
+
+    XLA upcasts bf16 dot accumulators to f32; under SPMD the cross-shard
+    partial-sum all-reduce then moves f32 bytes — 2x the wire traffic of the
+    Megatron-style bf16 reduction. Pinning preferred_element_type to the
+    activation dtype keeps TP boundary collectives in bf16 (§Perf iter 3).
+    """
+    return jnp.dot(a, w, preferred_element_type=a.dtype)
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * (1.0 + scale)).astype(x.dtype)
+
+
+def _rope_freqs(hd: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x (B, H, S, hd), positions (B, S) int32 — standard rotary embedding."""
+    hd = x.shape[-1]
+    freqs = _rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[:, None, :, None].astype(jnp.float32) * freqs  # (B,1,S,hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+                sections: Tuple[int, int, int]) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE.
+
+    positions (3, B, S): temporal/height/width position ids. The hd/2
+    frequency slots are split into `sections` (t, h, w); each section
+    rotates by its own position stream. For text tokens the three ids are
+    equal, reducing exactly to standard RoPE.
+    """
+    hd = x.shape[-1]
+    freqs = _rope_freqs(hd, theta)                       # (hd/2,)
+    sec = jnp.concatenate([
+        jnp.full((sections[0],), 0, jnp.int32),
+        jnp.full((sections[1],), 1, jnp.int32),
+        jnp.full((sections[2],), 2, jnp.int32),
+    ])
+    assert sec.shape[0] == hd // 2, (sections, hd)
+    # Select the position stream per frequency slot.
+    pos = positions.astype(jnp.float32)                  # (3, B, S)
+    pos_per_slot = pos[sec, :, :]                        # (hd/2, B, S)
+    ang = jnp.transpose(pos_per_slot, (1, 2, 0))[:, None, :, :] * freqs
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _softcap(logits: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+# Above this query length, self-attention runs query-chunked (flash-style
+# O(S·chunk) score memory instead of O(S²)). On real TPUs the Pallas kernel
+# replaces this; the lax.map form keeps HLO small and per-device VMEM-safe
+# for the dry-run at 32k/500k contexts.
+ATTN_CHUNK_THRESHOLD = 2048
+ATTN_CHUNK = 1024
+
+
+def _attn_core(q, k, v, mask, softcap):
+    """q (b,h,s,hd), k/v (b,h,t,hd), mask (b,s,t) → (b,h,s,hd).
+
+    Softmax runs in f32 (stability); probs drop to the activation dtype for
+    the PV matmul — halves the largest HBM operand (§Perf iteration 5; the
+    Pallas flash kernel subsumes this on real TPUs).
+    """
+    logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (q.shape[-1] ** 0.5)
+    logits = _softcap(logits, softcap)
+    logits = jnp.where(mask[:, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhst,bhtd->bhsd", probs, v,
+                      preferred_element_type=v.dtype)
+
+
+def attention(
+    cfg: ArchConfig,
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,                      # (B, S, D)
+    positions: jnp.ndarray,              # (B, S) or (3, B, S) for M-RoPE
+    *,
+    sliding_window: Optional[int] = None,
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+    cross_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    cross_mask: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """GQA attention with optional sliding window, softcap, KV cache, or
+    cross-attention (cross_kv = encoder K/V already projected). KV heads are
+    repeated to hq so head sharding propagates cleanly (kv-head counts below
+    the model-parallel degree would otherwise force GSPMD re-layouts)."""
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    group = hq // hkv
+
+    q = matmul(x, p["wq"]).reshape(b, s, hq, hd).transpose(0, 2, 1, 3)
+    if cross_kv is None:
+        k = matmul(x, p["wk"]).reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+        v = matmul(x, p["wv"]).reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+        if cfg.mrope_sections is not None:
+            q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            pos2d = positions if positions.ndim == 2 else positions[0]
+            q = apply_rope(q, pos2d, cfg.rope_theta)
+            k = apply_rope(k, pos2d, cfg.rope_theta)
+    else:
+        k, v = cross_kv
+
+    new_cache = None
+    if cache is not None and cross_kv is None:
+        idx = cache["len"]
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, idx, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, idx, 0))
+        k, v = ck, cv
+        new_cache = {"k": ck, "v": cv, "len": idx + s}
+
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+    s_kv = k.shape[2]
+
+    q_pos = positions if positions.ndim == 2 else positions[0]   # (B, S)
+    if cache is not None and cross_kv is None:
+        kv_pos = jnp.broadcast_to(jnp.arange(s_kv)[None, :], (b, s_kv))
+    elif cross_kv is not None:
+        kv_pos = None
+    else:
+        kv_pos = q_pos
+
+    def make_mask(qp):                                           # qp (B, cs)
+        if cross_kv is not None:
+            m = (cross_mask[:, None, :] if cross_mask is not None
+                 else jnp.ones((b, 1, s_kv), bool))
+            return jnp.broadcast_to(m, (b, qp.shape[1], s_kv))
+        m = kv_pos[:, None, :] <= qp[:, :, None]
+        if cache is not None:
+            m = m & (kv_pos[:, None, :] < cache["len"] + s)
+        if sliding_window is not None:
+            m = m & (kv_pos[:, None, :] > qp[:, :, None] - sliding_window)
+        return m
+
+    if s <= ATTN_CHUNK_THRESHOLD or s % ATTN_CHUNK != 0:
+        out = _attn_core(q, k, v, make_mask(q_pos), cfg.attn_softcap)
+    else:
+        n_chunks = s // ATTN_CHUNK
+        q_c = q.reshape(b, hq, n_chunks, ATTN_CHUNK, hd).transpose(2, 0, 1, 3, 4)
+        pos_c = q_pos.reshape(b, n_chunks, ATTN_CHUNK).transpose(1, 0, 2)
+
+        def chunk_fn(args):
+            qc, pc = args
+            return _attn_core(qc, k, v, make_mask(pc), cfg.attn_softcap)
+
+        out_c = jax.lax.map(chunk_fn, (q_c, pos_c))              # (n,b,h,cs,hd)
+        out = out_c.transpose(1, 2, 0, 3, 4).reshape(b, hq, s, hd)
+
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
+    return (matmul(out.astype(x.dtype), p["wo"]), new_cache)
+
+
+def mlp(p: Dict[str, jnp.ndarray], x: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU feed-forward (bf16-wire TP boundaries via matmul())."""
+    return matmul(jax.nn.silu(matmul(x, p["w_gate"])) * matmul(x, p["w_up"]),
+                  p["w_down"])
+
+
+def moe_ffn(cfg: ArchConfig, p: Dict[str, jnp.ndarray], x: jnp.ndarray,
+            mesh_axes=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k MoE with sort-based dropless-ish dispatch (capacity-bounded).
+
+    Returns (output, aux_loss). Dispatch avoids the (T, E, C) one-hot tensor:
+    position-in-expert is computed with a histogram + rank trick, then
+    tokens scatter into (E, C, d) buckets, experts run as one batched
+    einsum, and results scatter back. Tokens over capacity are dropped
+    (standard capacity-factor semantics; cf=1.25 default).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    xf = x.reshape(t, d)
+
+    gate_logits = xf @ p["w_router"]                       # (T, E)
+    probs = jax.nn.softmax(gate_logits.astype(jnp.float32), axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                 # (T, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # Load-balancing auxiliary loss (Switch-style).
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_e, e, dtype=jnp.float32), axis=1), axis=0)
+    aux = e * jnp.sum(me * ce) / k
+
+    # Flatten (token, slot) assignments.
+    flat_e = top_e.reshape(-1)                             # (T·k,)
+    flat_w = top_p.reshape(-1)
+    tok_id = jnp.repeat(jnp.arange(t), k)
+
+    cap = max(1, int(cfg.capacity_factor * t * k / e))
+    # Round capacity to a shardable multiple so (E, C, d) dispatch buffers
+    # tile over the data axes (32-way on the production mesh).
+    cap = ((cap + 63) // 64) * 64
+    # Rank of each assignment within its expert, via sorted order.
+    order = jnp.argsort(flat_e, stable=True)
+    hist = jnp.bincount(flat_e, length=e)
+    starts = jnp.cumsum(hist) - hist
+    ranks_sorted = jnp.arange(t * k) - starts[flat_e[order]]
+    pos = jnp.zeros_like(ranks_sorted).at[order].set(ranks_sorted)
+    keep = pos < cap
+
+    # Dropped assignments scatter out-of-bounds (mode="drop") so they can
+    # never clobber a kept slot.
+    slot = jnp.where(keep, flat_e * cap + pos, e * cap)     # (T·k,)
+    # Scatter int32 token ids into slots (MB-class), then GATHER rows —
+    # scattering the (E·C, d) activations directly makes GSPMD materialize
+    # the full dispatch buffer per device (506 GiB/chip on kimi-k2).
+    token_for_slot = jnp.full((e * cap,), t, jnp.int32)     # t = pad sentinel
+    token_for_slot = token_for_slot.at[slot].set(
+        tok_id.astype(jnp.int32), mode="drop")
+    xf_pad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)
+    dispatched = xf_pad[token_for_slot].reshape(e, cap, d)
+    if mesh_axes is not None:
+        from jax.sharding import PartitionSpec as _P
+        dispatched = jax.lax.with_sharding_constraint(
+            dispatched, _P(mesh_axes["model"], mesh_axes["data"], None))
+
+    pet = dict(preferred_element_type=dispatched.dtype)
+    hidden = jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", dispatched, p["w_gate"], **pet)) * \
+        jnp.einsum("ecd,edf->ecf", dispatched, p["w_up"], **pet)
+    expert_out = jnp.einsum("ecf,efd->ecd", hidden, p["w_down"], **pet)
+    if mesh_axes is not None:
+        from jax.sharding import PartitionSpec as _P
+        expert_out = jax.lax.with_sharding_constraint(
+            expert_out, _P(mesh_axes["model"], mesh_axes["data"], None))
+    expert_out = expert_out.reshape(e * cap, d)
+
+    gathered = expert_out[slot] * (flat_w * keep)[:, None].astype(x.dtype)
+    out = jnp.zeros((t, d), dtype=x.dtype).at[tok_id].add(gathered)
+    return out.reshape(b, s, d), aux

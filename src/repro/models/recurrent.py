@@ -1,0 +1,211 @@
+"""Recurrent sequence blocks: mLSTM / sLSTM (xLSTM) and RG-LRU (Griffin).
+
+Each block exposes a parallel `*_train` form over (B, S, D) and a
+single-step `*_step` form with explicit state for decode — the state is
+O(1) in sequence length, which is what makes `long_500k` runnable for
+these architectures.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# mLSTM — matrix memory, parallel (stabilized quadratic form) + recurrent step
+# --------------------------------------------------------------------------
+
+def mlstm_train(p: Dict[str, jnp.ndarray], x: jnp.ndarray, n_heads: int
+                ) -> jnp.ndarray:
+    """x (B, S, D) → (B, S, D). Stabilized parallel form (xLSTM eq. 2x)."""
+    b, s, d = x.shape
+    hd = d // n_heads
+
+    def split(w):
+        return (x @ w).reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = split(p["wq"]), split(p["wk"]), split(p["wv"])
+    i_pre = (x @ p["wi"]).reshape(b, s, n_heads).transpose(0, 2, 1)   # (B,H,S)
+    f_pre = (x @ p["wf"]).reshape(b, s, n_heads).transpose(0, 2, 1)
+
+    log_f = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    csum = jnp.cumsum(log_f, axis=-1)                                  # (B,H,S)
+    # D̃[t, u] = Σ_{u<j<=t} log f_j + ĩ_u  (u <= t)
+    dmat = csum[..., :, None] - csum[..., None, :] + \
+        i_pre.astype(jnp.float32)[..., None, :]
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    dmat = jnp.where(causal, dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=-1, keepdims=True)                          # (B,H,S,1)
+    m = jnp.maximum(m, -1e30)
+    dexp = jnp.exp(dmat - m)
+
+    logits = jnp.einsum("bhtd,bhud->bhtu", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (hd ** 0.5)
+    w = logits * dexp
+    norm = jnp.maximum(jnp.abs(jnp.sum(w, axis=-1, keepdims=True)),
+                       jnp.exp(-m))
+    h = jnp.einsum("bhtu,bhud->bhtd", w / norm, v.astype(jnp.float32))
+    h = h.transpose(0, 2, 1, 3).reshape(b, s, d).astype(x.dtype)
+    return rms_head_norm(h, p["gn"], n_heads) @ p["wo"]
+
+
+def mlstm_init_state(batch: int, n_heads: int, hd: int, dtype=jnp.float32):
+    return {
+        "c": jnp.zeros((batch, n_heads, hd, hd), dtype),
+        "n": jnp.zeros((batch, n_heads, hd), dtype),
+        "m": jnp.full((batch, n_heads), -1e30, dtype),
+    }
+
+
+def mlstm_step(p: Dict[str, jnp.ndarray], x: jnp.ndarray, state, n_heads: int):
+    """x (B, 1, D) one token; returns (y (B,1,D), new_state)."""
+    b, s, d = x.shape
+    hd = d // n_heads
+    xt = x[:, 0]
+
+    def split(w):
+        return (xt @ w).reshape(b, n_heads, hd)
+
+    q, k, v = split(p["wq"]), split(p["wk"]), split(p["wv"])
+    i_pre = (xt @ p["wi"]).reshape(b, n_heads).astype(jnp.float32)
+    f_pre = (xt @ p["wf"]).reshape(b, n_heads).astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(f_pre)
+
+    m_new = jnp.maximum(log_f + state["m"], i_pre)
+    i_g = jnp.exp(i_pre - m_new)[..., None]
+    f_g = jnp.exp(log_f + state["m"] - m_new)[..., None]
+
+    kq_scale = 1.0 / (hd ** 0.5)
+    c = f_g[..., None] * state["c"] + i_g[..., None] * \
+        jnp.einsum("bhd,bhe->bhde", v.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    n = f_g * state["n"] + i_g * k.astype(jnp.float32)
+    qs = q.astype(jnp.float32) * kq_scale
+    num = jnp.einsum("bhde,bhe->bhd", c, qs)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhe,bhe->bh", n, qs)),
+                      jnp.exp(-m_new))[..., None]
+    h = (num / den).reshape(b, 1, d).astype(x.dtype)
+    y = rms_head_norm(h, p["gn"], n_heads) @ p["wo"]
+    return y, {"c": c, "n": n, "m": m_new}
+
+
+def rms_head_norm(h: jnp.ndarray, scale: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """Per-head RMS group norm used by xLSTM outputs."""
+    shape = h.shape
+    hh = h.reshape(*shape[:-1], n_heads, shape[-1] // n_heads)
+    var = jnp.mean(jnp.square(hh.astype(jnp.float32)), axis=-1, keepdims=True)
+    hh = hh * jax.lax.rsqrt(var + 1e-6)
+    return (hh.reshape(shape) * (1.0 + scale)).astype(h.dtype)
+
+
+# --------------------------------------------------------------------------
+# sLSTM — scalar memory with recurrent gate mixing (sequential scan)
+# --------------------------------------------------------------------------
+
+def slstm_init_state(batch: int, d: int, dtype=jnp.float32):
+    return {
+        "c": jnp.zeros((batch, d), dtype),
+        "n": jnp.ones((batch, d), dtype),
+        "h": jnp.zeros((batch, d), dtype),
+        "m": jnp.zeros((batch, d), dtype),
+    }
+
+
+def _slstm_cell(p, state, xt):
+    """One sLSTM step; xt (B, D)."""
+    h_prev = state["h"]
+    zi = xt @ p["wz"] + h_prev @ p["rz"]
+    ii = (xt @ p["wi_g"] + h_prev @ p["ri"]).astype(jnp.float32)
+    ff = (xt @ p["wf_g"] + h_prev @ p["rf"]).astype(jnp.float32)
+    oo = xt @ p["wo_g"] + h_prev @ p["ro"]
+
+    log_f = jax.nn.log_sigmoid(ff)
+    m_new = jnp.maximum(log_f + state["m"], ii)
+    i_g = jnp.exp(ii - m_new)
+    f_g = jnp.exp(log_f + state["m"] - m_new)
+
+    c = f_g * state["c"] + i_g * jnp.tanh(zi).astype(jnp.float32)
+    n = jnp.maximum(f_g * state["n"] + i_g, 1e-6)
+    h = jax.nn.sigmoid(oo).astype(jnp.float32) * (c / n)
+    h = h.astype(xt.dtype)
+    return {"c": c, "n": n, "h": h, "m": m_new}, h
+
+
+def slstm_train(p: Dict[str, jnp.ndarray], x: jnp.ndarray) -> jnp.ndarray:
+    """x (B, S, D) → (B, S, D); sequential lax.scan over time."""
+    b, s, d = x.shape
+    state0 = slstm_init_state(b, d, jnp.float32)
+    # carry "h" must match the emitted h dtype (activation dtype).
+    state0["h"] = state0["h"].astype(x.dtype)
+
+    def scan_fn(state, xt):
+        new_state, h = _slstm_cell(p, state, xt)
+        return new_state, h
+
+    _, hs = jax.lax.scan(scan_fn, state0, x.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2) @ p["wo"]
+
+
+def slstm_step(p: Dict[str, jnp.ndarray], x: jnp.ndarray, state):
+    new_state, h = _slstm_cell(p, state, x[:, 0])
+    return (h @ p["wo"])[:, None], new_state
+
+
+# --------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma / Griffin): gated linear recurrence + temporal conv
+# --------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+
+
+def rglru_train(p: Dict[str, jnp.ndarray], x: jnp.ndarray) -> jnp.ndarray:
+    """Parallel RG-LRU over (B, S, W) via associative scan."""
+    r = jax.nn.sigmoid((x @ p["w_rec_gate"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ p["w_in_gate"]).astype(jnp.float32))
+    log_a = -_RGLRU_C * jax.nn.softplus(p["lambda"]) * r       # (B,S,W)
+    a = jnp.exp(log_a)
+    gated_x = x.astype(jnp.float32) * i
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b_term = beta * gated_x
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b_term), axis=1)
+    return h.astype(x.dtype)
+
+
+def rglru_init_state(batch: int, width: int, dtype=jnp.float32):
+    return jnp.zeros((batch, width), jnp.float32)
+
+
+def rglru_step(p: Dict[str, jnp.ndarray], x: jnp.ndarray, state):
+    """x (B, 1, W); state (B, W)."""
+    xt = x[:, 0]
+    r = jax.nn.sigmoid((xt @ p["w_rec_gate"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((xt @ p["w_in_gate"]).astype(jnp.float32))
+    log_a = -_RGLRU_C * jax.nn.softplus(p["lambda"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    h = a * state + beta * (xt.astype(jnp.float32) * i)
+    return h[:, None].astype(x.dtype), h
+
+
+def temporal_conv_train(p: Dict[str, jnp.ndarray], x: jnp.ndarray,
+                        width: int) -> jnp.ndarray:
+    """Causal depthwise conv1d (B, S, W), kernel (width, W)."""
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1]] * p["conv_w"][i] for i in range(width))
+    return out + p["conv_b"]
+
+
+def temporal_conv_step(p: Dict[str, jnp.ndarray], x: jnp.ndarray,
+                       state: jnp.ndarray, width: int):
+    """x (B, 1, W); state (B, width-1, W) holds the trailing window."""
+    window = jnp.concatenate([state, x], axis=1)          # (B, width, W)
+    out = jnp.einsum("bkw,kw->bw", window, p["conv_w"]) + p["conv_b"]
+    return out[:, None], window[:, 1:]

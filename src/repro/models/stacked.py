@@ -1,0 +1,295 @@
+"""Scan-over-layers execution path (production / dry-run).
+
+Unrolled layer loops produce O(n_layers) HLO — on an 80-layer model that is
+minutes of XLA compile time per (arch × shape × mesh) cell. The scanned
+path stacks per-layer params along a leading axis and runs `lax.scan` over
+repeats of the arch's block pattern ("unit"), giving O(unit) HLO.
+
+Grouping: blocks() is cut into R = n_layers // len(unit) repeats plus an
+unrolled remainder, e.g. recurrentgemma 26L with unit (rglru, rglru, local)
+→ scan R=8 over the triple + 2 remainder layers.
+
+Cost accounting: XLA counts a while-loop body ONCE in cost_analysis, so the
+dry-run composes totals as `module_cost + (R-1) × body_cost` using
+`body_fn()` compiled standalone — trip counts are known statically here.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig, BlockKind
+from repro.models import layers as L
+from repro.models.transformer import (
+    _layer_apply, _build_positions, _shard, _init_layer, _dtype, encode,
+)
+
+
+def unit_kinds(cfg: ArchConfig) -> List[BlockKind]:
+    if cfg.block_pattern:
+        return [BlockKind(b) for b in cfg.block_pattern]
+    kinds = cfg.blocks()
+    if cfg.local_global_pattern:
+        return kinds[: cfg.local_global_pattern]
+    return kinds[:1]
+
+
+def group_split(cfg: ArchConfig) -> Tuple[int, int]:
+    """(repeats R, remainder layers)."""
+    u = len(unit_kinds(cfg))
+    return cfg.n_layers // u, cfg.n_layers % u
+
+
+def init_params_stacked(cfg: ArchConfig, key: jax.Array) -> Dict[str, Any]:
+    """Same weights layout as init_params but layers stacked by unit
+    position: params["scan"][j] has leaves (R, ...) for unit position j;
+    params["rest"] is the unrolled remainder."""
+    dt = _dtype(cfg)
+    kinds = cfg.blocks()
+    u_kinds = unit_kinds(cfg)
+    u = len(u_kinds)
+    r, rem = group_split(cfg)
+
+    # Same split count as init_params so weights match layer-for-layer.
+    keys = jax.random.split(key, cfg.n_layers + cfg.encoder_layers + 3)
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model))
+                  * cfg.d_model ** -0.5).astype(dt),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(keys[1], (cfg.d_model, cfg.vocab))
+            * cfg.d_model ** -0.5).astype(dt)
+
+    per_layer = [
+        _init_layer(keys[2 + i], cfg, kinds[i], dt, cross=cfg.is_enc_dec)
+        for i in range(cfg.n_layers)
+    ]
+    params["scan"] = []
+    for j in range(u):
+        members = [per_layer[rep * u + j] for rep in range(r)]
+        params["scan"].append(
+            jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *members))
+    params["rest"] = per_layer[r * u:]
+
+    if cfg.is_enc_dec:
+        enc_layers = [
+            _init_layer(keys[2 + cfg.n_layers + i], cfg, BlockKind.ATTN, dt,
+                        cross=False)
+            for i in range(cfg.encoder_layers)
+        ]
+        params["enc_scan"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *enc_layers)
+        params["enc_norm"] = jnp.zeros((cfg.d_model,), dt)
+    if cfg.n_vision_tokens:
+        params["vision_proj"] = (
+            jax.random.normal(keys[-1], (cfg.d_model, cfg.d_model))
+            * cfg.d_model ** -0.5).astype(dt)
+    if cfg.audio_frames:
+        params["audio_proj"] = (
+            jax.random.normal(keys[-1], (cfg.d_model, cfg.d_model))
+            * cfg.d_model ** -0.5).astype(dt)
+    return params
+
+
+def _unit_apply(cfg, u_kinds, unit_params, x, positions, mesh_axes,
+                enc_out=None):
+    aux = jnp.float32(0.0)
+    for j, kind in enumerate(u_kinds):
+        x, a = _layer_apply(cfg, kind, unit_params[j], x, positions,
+                            mesh_axes, enc_out, None)
+        aux = aux + a
+    return x, aux
+
+
+def encode_scan(cfg: ArchConfig, params, audio_embeds, mesh_axes=None):
+    b = audio_embeds.shape[0]
+    e = (audio_embeds @ params["audio_proj"]).astype(audio_embeds.dtype)
+    e = _shard(e, mesh_axes, ("data", None, None))
+    epos = jnp.arange(e.shape[1], dtype=jnp.int32)[None, :].repeat(b, 0)
+
+    def body(carry, p_):
+        h = L.rms_norm(carry, p_["ln1"])
+        hkv, hd = cfg.n_kv_heads, cfg.hd
+        ek = (h @ p_["attn"]["wk"]).reshape(b, -1, hkv, hd).transpose(0, 2, 1, 3)
+        ev = (h @ p_["attn"]["wv"]).reshape(b, -1, hkv, hd).transpose(0, 2, 1, 3)
+        o, _ = L.attention(cfg, p_["attn"], h, epos, cross_kv=(ek, ev))
+        out = carry + o
+        if "mlp" in p_:
+            out = out + L.mlp(p_["mlp"], L.rms_norm(out, p_["ln2"]))
+        return out, ()
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    e, _ = jax.lax.scan(fn, e, params["enc_scan"])
+    return L.rms_norm(e, params["enc_norm"])
+
+
+def forward_scan(cfg: ArchConfig, params, tokens,
+                 vision_embeds=None, audio_embeds=None, mesh_axes=None,
+                 last_only: bool = False):
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    x = _shard(x, mesh_axes, ("data", None, None))
+    if cfg.n_vision_tokens and vision_embeds is not None:
+        vis = (vision_embeds @ params["vision_proj"]).astype(x.dtype)
+        x = jnp.concatenate([vis, x[:, cfg.n_vision_tokens:]], axis=1)
+    enc_out = None
+    if cfg.is_enc_dec:
+        enc_out = encode_scan(cfg, params, audio_embeds, mesh_axes)
+
+    positions = _build_positions(cfg, b, s)
+    u_kinds = unit_kinds(cfg)
+    r, rem = group_split(cfg)
+
+    def body(carry, unit_params):
+        x_, aux_ = carry
+        x_, a = _unit_apply(cfg, u_kinds, unit_params, x_, positions,
+                            mesh_axes, enc_out)
+        return (x_, aux_ + a), ()
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(fn, (x, jnp.float32(0.0)),
+                               tuple(params["scan"]))
+    kinds = cfg.blocks()
+    for i, p in enumerate(params["rest"]):
+        x, a = _layer_apply(cfg, kinds[r * len(u_kinds) + i], p, x,
+                            positions, mesh_axes, enc_out, None)
+        aux = aux + a
+
+    if last_only:
+        x = x[:, -1:, :]     # serving prefill: logits for the next token only
+    x = L.rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = L.matmul(x, head)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    # vocab axis stays model-sharded (sharded softmax in the loss)
+    logits = _shard(logits, mesh_axes, ("data", None, "model"))
+    return logits, aux
+
+
+def lm_loss_scan(cfg: ArchConfig, params, tokens, labels,
+                 vision_embeds=None, audio_embeds=None, mesh_axes=None):
+    """Shard-friendly CE: one-hot einsum instead of take_along_axis so the
+    vocab axis stays model-sharded through the loss (no logits all-gather)."""
+    logits, aux = forward_scan(cfg, params, tokens, vision_embeds,
+                               audio_embeds, mesh_axes)
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    logz = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    onehot = jax.nn.one_hot(labels, cfg.vocab, dtype=jnp.float32)
+    onehot = _shard(onehot, mesh_axes, ("data", None, "model"))
+    gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    nll = jnp.mean(logz - gold)
+    return nll + 0.01 * aux
+
+
+# ---------------------------------------------------------------- decode ----
+
+def init_decode_state_stacked(cfg: ArchConfig, batch: int, max_len: int,
+                              dtype=None):
+    """Decode state grouped like the params: state["scan"][j] stacked (R,...)
+    for unit position j; state["rest"] unrolled."""
+    from repro.models.transformer import init_decode_state
+    flat = init_decode_state(cfg, batch, max_len, dtype)
+    u = len(unit_kinds(cfg))
+    r, rem = group_split(cfg)
+    layers = flat["layers"]
+    scan_states = []
+    for j in range(u):
+        members = [layers[rep * u + j] for rep in range(r)]
+        scan_states.append(
+            jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *members))
+    return {"pos": jnp.int32(0), "scan": scan_states,
+            "rest": layers[r * u:]}
+
+
+def decode_step_scan(cfg: ArchConfig, params, token, state,
+                     enc_out=None, mesh_axes=None):
+    from repro.models.transformer import _decode_attn
+    from repro.models import recurrent as R_
+
+    b = token.shape[0]
+    pos = state["pos"]
+    x = params["embed"][token]
+    u_kinds = unit_kinds(cfg)
+    r, rem = group_split(cfg)
+
+    def apply_one(kind, p, st, x):
+        h = L.rms_norm(x, p["ln1"])
+        if kind in (BlockKind.ATTN, BlockKind.MOE, BlockKind.LOCAL_ATTN):
+            window = cfg.sliding_window if kind == BlockKind.LOCAL_ATTN else None
+            attn_out, new_st = _decode_attn(cfg, p["attn"], h, st, pos, window,
+                                            ring=kind == BlockKind.LOCAL_ATTN)
+            x = x + attn_out
+            if enc_out is not None and "xattn" in p:
+                hx = L.rms_norm(x, p["ln_x"])
+                hkv, hd = cfg.n_kv_heads, cfg.hd
+                ek = (enc_out @ p["xattn"]["wk"]).reshape(
+                    b, -1, hkv, hd).transpose(0, 2, 1, 3)
+                ev = (enc_out @ p["xattn"]["wv"]).reshape(
+                    b, -1, hkv, hd).transpose(0, 2, 1, 3)
+                posb = jnp.full((b, 1), pos, jnp.int32)
+                cross_out, _ = L.attention(cfg, p["xattn"], hx, posb,
+                                           cross_kv=(ek, ev))
+                x = x + cross_out
+            h2 = L.rms_norm(x, p["ln2"])
+            if kind == BlockKind.MOE:
+                ffn_out, _ = L.moe_ffn(cfg, p["moe"], h2)
+            elif "mlp" in p:
+                ffn_out = L.mlp(p["mlp"], h2)
+            else:
+                ffn_out = jnp.zeros_like(x)
+            x = x + ffn_out
+        elif kind == BlockKind.MLSTM:
+            y, new_st = R_.mlstm_step(p["mlstm"], h, st, cfg.n_heads)
+            x = x + y
+            if "mlp" in p:
+                x = x + L.mlp(p["mlp"], L.rms_norm(x, p["ln2"]))
+        elif kind == BlockKind.SLSTM:
+            y, new_st = R_.slstm_step(p["slstm"], h, st)
+            x = x + y
+            if "mlp" in p:
+                x = x + L.mlp(p["mlp"], L.rms_norm(x, p["ln2"]))
+        elif kind == BlockKind.RGLRU:
+            rp = p["rec"]
+            gate = jax.nn.gelu(h @ rp["w_branch_gate"])
+            lin = h @ rp["w_branch_lin"]
+            lin, conv_st = R_.temporal_conv_step(rp, lin, st["conv"],
+                                                 cfg.conv_width)
+            rec, h_st = R_.rglru_step(rp, lin, st["h"])
+            new_st = {"h": h_st, "conv": conv_st}
+            x = x + (gate * rec) @ rp["w_out"]
+            if "mlp" in p:
+                x = x + L.mlp(p["mlp"], L.rms_norm(x, p["ln2"]))
+        return x, new_st
+
+    def body(x_, xs):
+        unit_params, unit_states = xs
+        new_states = []
+        for j, kind in enumerate(u_kinds):
+            x_, ns = apply_one(kind, unit_params[j], unit_states[j], x_)
+            new_states.append(ns)
+        return x_, tuple(new_states)
+
+    x, new_scan_states = jax.lax.scan(
+        body, x, (tuple(params["scan"]), tuple(state["scan"])))
+
+    kinds = cfg.blocks()
+    new_rest = []
+    for i, p in enumerate(params["rest"]):
+        kind = kinds[r * len(u_kinds) + i]
+        x, ns = apply_one(kind, p, state["rest"][i], x)
+        new_rest.append(ns)
+
+    x = L.rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = L.matmul(x, head)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits, {"pos": pos + 1, "scan": list(new_scan_states),
+                    "rest": new_rest}

@@ -1,0 +1,498 @@
+"""Composable decoder / encoder-decoder stack covering the 10 assigned archs.
+
+One `forward` covers: dense GQA (yi, deepseek), SWA (mixtral), alternating
+local/global + softcaps (gemma2), MoE (mixtral, kimi-k2), M-RoPE + vision
+stub (qwen2-vl), audio enc-dec stub (seamless-m4t), xLSTM blocks
+(xlstm-125m), and RG-LRU hybrid (recurrentgemma). Decode paths carry O(1)
+or O(window) state for recurrent/local blocks — that is what makes
+`long_500k` feasible for the sub-quadratic archs.
+
+Sharding: when `mesh_axes` is provided (dryrun/launcher), activations get
+`with_sharding_constraint` hints at layer boundaries; on a bare CPU test no
+constraint is applied.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig, BlockKind
+from repro.models import layers as L
+from repro.models import recurrent as R
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _shard(x, mesh_axes, spec):
+    """mesh_axes: None (no constraints) or {"data": axes, "model": axis}.
+    spec entries are "data"/"model"/None and resolve per-mesh, so the same
+    model code runs on single-pod (data, model) and multi-pod
+    (pod, data, model) meshes."""
+    if mesh_axes is None:
+        return x
+    resolved = tuple(mesh_axes.get(a, None) if isinstance(a, str) else a
+                     for a in spec)
+    return jax.lax.with_sharding_constraint(x, P(*resolved))
+
+
+MESH_AXES_SINGLE = {"data": ("data",), "model": "model"}
+MESH_AXES_MULTI = {"data": ("pod", "data"), "model": "model"}
+
+
+# --------------------------------------------------------------------------
+# Parameter initialization
+# --------------------------------------------------------------------------
+
+def _init_attn(key, cfg: ArchConfig, dt):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        "wq": (jax.random.normal(k1, (d, hq * hd)) * s).astype(dt),
+        "wk": (jax.random.normal(k2, (d, hkv * hd)) * s).astype(dt),
+        "wv": (jax.random.normal(k3, (d, hkv * hd)) * s).astype(dt),
+        "wo": (jax.random.normal(k4, (hq * hd, d)) * (hq * hd) ** -0.5).astype(dt),
+    }
+
+
+def _init_mlp(key, d_in, d_ff, dt):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": (jax.random.normal(k1, (d_in, d_ff)) * d_in ** -0.5).astype(dt),
+        "w_up": (jax.random.normal(k2, (d_in, d_ff)) * d_in ** -0.5).astype(dt),
+        "w_down": (jax.random.normal(k3, (d_ff, d_in)) * d_ff ** -0.5).astype(dt),
+    }
+
+
+def _init_moe(key, cfg: ArchConfig, dt):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.expert_d_ff or cfg.d_ff
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    return {
+        "w_router": (jax.random.normal(k0, (d, e)) * d ** -0.5).astype(dt),
+        "w_gate": (jax.random.normal(k1, (e, d, f)) * d ** -0.5).astype(dt),
+        "w_up": (jax.random.normal(k2, (e, d, f)) * d ** -0.5).astype(dt),
+        "w_down": (jax.random.normal(k3, (e, f, d)) * f ** -0.5).astype(dt),
+    }
+
+
+def _init_mlstm(key, cfg: ArchConfig, dt):
+    d = cfg.d_model
+    ks = jax.random.split(key, 7)
+    s = d ** -0.5
+    return {
+        "wq": (jax.random.normal(ks[0], (d, d)) * s).astype(dt),
+        "wk": (jax.random.normal(ks[1], (d, d)) * s).astype(dt),
+        "wv": (jax.random.normal(ks[2], (d, d)) * s).astype(dt),
+        "wi": (jax.random.normal(ks[3], (d, cfg.n_heads)) * s).astype(dt),
+        "wf": (jax.random.normal(ks[4], (d, cfg.n_heads)) * s).astype(dt),
+        "gn": jnp.zeros((d,), dt),
+        "wo": (jax.random.normal(ks[5], (d, d)) * s).astype(dt),
+    }
+
+
+def _init_slstm(key, cfg: ArchConfig, dt):
+    d = cfg.d_model
+    ks = jax.random.split(key, 9)
+    s = d ** -0.5
+    p = {}
+    for i, nm in enumerate(["wz", "wi_g", "wf_g", "wo_g"]):
+        p[nm] = (jax.random.normal(ks[i], (d, d)) * s).astype(dt)
+    for i, nm in enumerate(["rz", "ri", "rf", "ro"]):
+        p[nm] = (jax.random.normal(ks[4 + i], (d, d)) * s * 0.5).astype(dt)
+    p["wo"] = (jax.random.normal(ks[8], (d, d)) * s).astype(dt)
+    return p
+
+
+def _init_rglru_block(key, cfg: ArchConfig, dt):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "w_branch_gate": (jax.random.normal(ks[0], (d, w)) * s).astype(dt),
+        "w_branch_lin": (jax.random.normal(ks[1], (d, w)) * s).astype(dt),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, w)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "w_rec_gate": (jax.random.normal(ks[3], (w, w)) * w ** -0.5).astype(dt),
+        "w_in_gate": (jax.random.normal(ks[4], (w, w)) * w ** -0.5).astype(dt),
+        "lambda": jnp.full((w,), 0.6, dt),
+        "w_out": (jax.random.normal(ks[5], (w, d)) * w ** -0.5).astype(dt),
+    }
+
+
+def _init_layer(key, cfg: ArchConfig, kind: BlockKind, dt, cross: bool):
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    p: Dict[str, Any] = {"ln1": jnp.zeros((d,), dt)}
+    if kind in (BlockKind.ATTN, BlockKind.LOCAL_ATTN, BlockKind.MOE):
+        p["attn"] = _init_attn(ks[0], cfg, dt)
+        p["ln2"] = jnp.zeros((d,), dt)
+        if kind == BlockKind.MOE:
+            p["moe"] = _init_moe(ks[1], cfg, dt)
+        elif cfg.d_ff:
+            p["mlp"] = _init_mlp(ks[1], d, cfg.d_ff, dt)
+    elif kind == BlockKind.MLSTM:
+        p["mlstm"] = _init_mlstm(ks[0], cfg, dt)
+        if cfg.d_ff:
+            p["ln2"] = jnp.zeros((d,), dt)
+            p["mlp"] = _init_mlp(ks[1], d, cfg.d_ff, dt)
+    elif kind == BlockKind.SLSTM:
+        p["slstm"] = _init_slstm(ks[0], cfg, dt)
+        if cfg.d_ff:
+            p["ln2"] = jnp.zeros((d,), dt)
+            p["mlp"] = _init_mlp(ks[1], d, cfg.d_ff, dt)
+    elif kind == BlockKind.RGLRU:
+        p["rec"] = _init_rglru_block(ks[0], cfg, dt)
+        if cfg.d_ff:
+            p["ln2"] = jnp.zeros((d,), dt)
+            p["mlp"] = _init_mlp(ks[1], d, cfg.d_ff, dt)
+    if cross:
+        p["ln_x"] = jnp.zeros((d,), dt)
+        p["xattn"] = _init_attn(ks[2], cfg, dt)
+    return p
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Dict[str, Any]:
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, cfg.n_layers + cfg.encoder_layers + 3)
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model))
+                  * cfg.d_model ** -0.5).astype(dt),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(keys[1], (cfg.d_model, cfg.vocab))
+            * cfg.d_model ** -0.5).astype(dt)
+    kinds = cfg.blocks()
+    params["layers"] = [
+        _init_layer(keys[2 + i], cfg, kinds[i], dt, cross=cfg.is_enc_dec)
+        for i in range(cfg.n_layers)
+    ]
+    if cfg.is_enc_dec:
+        params["enc_layers"] = [
+            _init_layer(keys[2 + cfg.n_layers + i], cfg, BlockKind.ATTN, dt,
+                        cross=False)
+            for i in range(cfg.encoder_layers)
+        ]
+        params["enc_norm"] = jnp.zeros((cfg.d_model,), dt)
+    if cfg.n_vision_tokens:
+        # Frontend STUB projection for precomputed patch embeddings.
+        params["vision_proj"] = (
+            jax.random.normal(keys[-1], (cfg.d_model, cfg.d_model))
+            * cfg.d_model ** -0.5).astype(dt)
+    if cfg.audio_frames:
+        params["audio_proj"] = (
+            jax.random.normal(keys[-1], (cfg.d_model, cfg.d_model))
+            * cfg.d_model ** -0.5).astype(dt)
+    return params
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+# --------------------------------------------------------------------------
+# Forward (training / prefill)
+# --------------------------------------------------------------------------
+
+def _layer_apply(cfg: ArchConfig, kind: BlockKind, p, x, positions,
+                 mesh_axes, enc_out=None, enc_mask=None):
+    aux = jnp.float32(0.0)
+    h = L.rms_norm(x, p["ln1"])
+    if kind in (BlockKind.ATTN, BlockKind.LOCAL_ATTN, BlockKind.MOE):
+        window = cfg.sliding_window if kind == BlockKind.LOCAL_ATTN else None
+        attn_out, _ = L.attention(cfg, p["attn"], h, positions,
+                                  sliding_window=window)
+        x = x + attn_out
+        if enc_out is not None:
+            hx = L.rms_norm(x, p["ln_x"])
+            b, s_enc, d = enc_out.shape
+            hkv, hd = cfg.n_kv_heads, cfg.hd
+            ek = (enc_out @ p["xattn"]["wk"]).reshape(b, s_enc, hkv, hd)
+            ev = (enc_out @ p["xattn"]["wv"]).reshape(b, s_enc, hkv, hd)
+            cross_out, _ = L.attention(
+                cfg, p["xattn"], hx, positions,
+                cross_kv=(ek.transpose(0, 2, 1, 3), ev.transpose(0, 2, 1, 3)),
+                cross_mask=enc_mask)
+            x = x + cross_out
+        h2 = L.rms_norm(x, p["ln2"])
+        if kind == BlockKind.MOE:
+            ffn_out, aux = L.moe_ffn(cfg, p["moe"], h2, mesh_axes)
+        elif "mlp" in p:
+            ffn_out = L.mlp(p["mlp"], h2)
+        else:
+            ffn_out = jnp.zeros_like(x)
+        x = x + ffn_out
+    elif kind == BlockKind.MLSTM:
+        x = x + R.mlstm_train(p["mlstm"], h, cfg.n_heads)
+        if "mlp" in p:
+            x = x + L.mlp(p["mlp"], L.rms_norm(x, p["ln2"]))
+    elif kind == BlockKind.SLSTM:
+        x = x + R.slstm_train(p["slstm"], h)
+        if "mlp" in p:
+            x = x + L.mlp(p["mlp"], L.rms_norm(x, p["ln2"]))
+    elif kind == BlockKind.RGLRU:
+        rp = p["rec"]
+        gate = jax.nn.gelu(h @ rp["w_branch_gate"])
+        lin = h @ rp["w_branch_lin"]
+        lin = R.temporal_conv_train(rp, lin, cfg.conv_width)
+        rec = R.rglru_train(rp, lin)
+        x = x + (gate * rec) @ rp["w_out"]
+        if "mlp" in p:
+            x = x + L.mlp(p["mlp"], L.rms_norm(x, p["ln2"]))
+    x = _shard(x, mesh_axes, ("data", None, None))
+    return x, aux
+
+
+def _build_positions(cfg: ArchConfig, b: int, s: int):
+    pos = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, axis=0)
+    if cfg.mrope_sections is None:
+        return pos
+    # M-RoPE: first n_vision_tokens form a (t=0, h, w) grid; text continues
+    # with equal t/h/w ids (exactly standard RoPE for text).
+    nv = cfg.n_vision_tokens
+    grid_w = max(1, int(nv ** 0.5))
+    vis_h = (jnp.arange(nv) // grid_w).astype(jnp.int32)
+    vis_w = (jnp.arange(nv) % grid_w).astype(jnp.int32)
+    t_ids = jnp.concatenate([jnp.zeros((nv,), jnp.int32),
+                             jnp.arange(s - nv, dtype=jnp.int32) + 1])
+    h_ids = jnp.concatenate([vis_h, jnp.arange(s - nv, dtype=jnp.int32) + 1])
+    w_ids = jnp.concatenate([vis_w, jnp.arange(s - nv, dtype=jnp.int32) + 1])
+    return jnp.stack([t_ids, h_ids, w_ids])[:, None, :].repeat(b, axis=1)
+
+
+def encode(cfg: ArchConfig, params, audio_embeds: jnp.ndarray,
+           mesh_axes=None) -> jnp.ndarray:
+    """Bidirectional encoder over precomputed frontend embeddings
+    (seamless-m4t). Memoize the result for decode."""
+    b = audio_embeds.shape[0]
+    e = (audio_embeds @ params["audio_proj"]).astype(audio_embeds.dtype)
+    e = _shard(e, mesh_axes, ("data", None, None))
+    epos = jnp.arange(e.shape[1], dtype=jnp.int32)[None, :].repeat(b, 0)
+
+    def enc_fn(e_, p_):
+        h = L.rms_norm(e_, p_["ln1"])
+        # Bidirectional attention: route through cross_kv against itself
+        # (no causal mask).
+        hkv, hd = cfg.n_kv_heads, cfg.hd
+        ek = (h @ p_["attn"]["wk"]).reshape(b, -1, hkv, hd).transpose(0, 2, 1, 3)
+        ev = (h @ p_["attn"]["wv"]).reshape(b, -1, hkv, hd).transpose(0, 2, 1, 3)
+        o, _ = L.attention(cfg, p_["attn"], h, epos, cross_kv=(ek, ev))
+        e_ = e_ + o
+        if "mlp" in p_:
+            e_ = e_ + L.mlp(p_["mlp"], L.rms_norm(e_, p_["ln2"]))
+        return e_
+
+    for p in params["enc_layers"]:
+        e = (jax.checkpoint(enc_fn)(e, p) if cfg.remat else enc_fn(e, p))
+    return L.rms_norm(e, params["enc_norm"])
+
+
+def forward(cfg: ArchConfig, params, tokens: jnp.ndarray,
+            vision_embeds: Optional[jnp.ndarray] = None,
+            audio_embeds: Optional[jnp.ndarray] = None,
+            mesh_axes: Optional[bool] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens (B, S) → (logits (B, S, V), aux_loss)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    x = _shard(x, mesh_axes, ("data", None, None))
+    if cfg.n_vision_tokens and vision_embeds is not None:
+        vis = (vision_embeds @ params["vision_proj"]).astype(x.dtype)
+        x = jnp.concatenate([vis, x[:, cfg.n_vision_tokens:]], axis=1)
+
+    enc_out = enc_mask = None
+    if cfg.is_enc_dec:
+        assert audio_embeds is not None, "enc-dec needs encoder frames"
+        enc_out = encode(cfg, params, audio_embeds, mesh_axes)
+
+    positions = _build_positions(cfg, b, s)
+    kinds = cfg.blocks()
+    aux_total = jnp.float32(0.0)
+    for li, p in enumerate(params["layers"]):
+        fn = functools.partial(_layer_apply, cfg, kinds[li])
+        if cfg.remat:
+            fn = jax.checkpoint(fn, static_argnums=())
+        x, aux = fn(p, x, positions, mesh_axes, enc_out, enc_mask)
+        aux_total = aux_total + aux
+
+    x = L.rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = L.matmul(x, head)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    logits = _shard(logits, mesh_axes, ("data", None, "model"))
+    return logits, aux_total
+
+
+def lm_loss(cfg: ArchConfig, params, tokens, labels,
+            vision_embeds=None, audio_embeds=None, mesh_axes=None):
+    logits, aux = forward(cfg, params, tokens, vision_embeds, audio_embeds,
+                          mesh_axes)
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = jnp.mean(logz - gold)
+    return nll + 0.01 * aux
+
+
+# --------------------------------------------------------------------------
+# Decode (serve_step): one new token against cached/recurrent state
+# --------------------------------------------------------------------------
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int,
+                      dtype=None) -> Dict[str, Any]:
+    """Allocate per-layer decode state. Attention layers hold KV caches
+    (full length for global, `sliding_window` ring for local); recurrent
+    layers hold O(1) state."""
+    dt = dtype or _dtype(cfg)
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    states: List[Dict[str, Any]] = []
+    for kind in cfg.blocks():
+        if kind in (BlockKind.ATTN, BlockKind.MOE):
+            states.append({
+                "k": jnp.zeros((batch, hkv, max_len, hd), dt),
+                "v": jnp.zeros((batch, hkv, max_len, hd), dt),
+            })
+        elif kind == BlockKind.LOCAL_ATTN:
+            w = cfg.sliding_window or max_len
+            w = min(w, max_len)
+            states.append({
+                "k": jnp.zeros((batch, hkv, w, hd), dt),
+                "v": jnp.zeros((batch, hkv, w, hd), dt),
+                "slot_pos": jnp.full((w,), -1, jnp.int32),
+            })
+        elif kind == BlockKind.MLSTM:
+            states.append(R.mlstm_init_state(
+                batch, cfg.n_heads, cfg.d_model // cfg.n_heads))
+        elif kind == BlockKind.SLSTM:
+            states.append(R.slstm_init_state(batch, cfg.d_model))
+        elif kind == BlockKind.RGLRU:
+            w = cfg.lru_width or cfg.d_model
+            states.append({
+                "h": R.rglru_init_state(batch, w),
+                "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dt),
+            })
+    return {"pos": jnp.int32(0), "layers": states}
+
+
+def _decode_attn(cfg, p, h, state, pos, window=None, ring=False):
+    """One-token attention against a cache (ring=False) or a fixed-size
+    ring buffer (ring=True, sliding-window layers)."""
+    b = h.shape[0]
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (h @ p["wq"]).reshape(b, 1, hq, hd).transpose(0, 2, 1, 3)
+    k_new = (h @ p["wk"]).reshape(b, 1, hkv, hd).transpose(0, 2, 1, 3)
+    v_new = (h @ p["wv"]).reshape(b, 1, hkv, hd).transpose(0, 2, 1, 3)
+    posb = jnp.full((b, 1), pos, jnp.int32)
+    q = L.apply_rope(q, posb, cfg.rope_theta)
+    k_new = L.apply_rope(k_new, posb, cfg.rope_theta)
+
+    if not ring:
+        k = jax.lax.dynamic_update_slice(
+            state["k"], k_new.astype(state["k"].dtype), (0, 0, pos, 0))
+        v = jax.lax.dynamic_update_slice(
+            state["v"], v_new.astype(state["v"].dtype), (0, 0, pos, 0))
+        kv_pos = jnp.arange(k.shape[2])
+        valid = kv_pos <= pos
+        new_state = {"k": k, "v": v}
+    else:  # ring buffer
+        w = state["k"].shape[2]
+        slot = pos % w
+        k = jax.lax.dynamic_update_slice(
+            state["k"], k_new.astype(state["k"].dtype), (0, 0, slot, 0))
+        v = jax.lax.dynamic_update_slice(
+            state["v"], v_new.astype(state["v"].dtype), (0, 0, slot, 0))
+        slot_pos = jax.lax.dynamic_update_slice(
+            state["slot_pos"], jnp.array([pos], jnp.int32), (slot,))
+        valid = (slot_pos >= 0) & (slot_pos <= pos)
+        if window is not None:
+            valid = valid & (slot_pos > pos - window)
+        new_state = {"k": k, "v": v, "slot_pos": slot_pos}
+
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, hd)
+    logits = jnp.einsum("bhgd,bhtd->bhgt", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (hd ** 0.5)
+    logits = L._softcap(logits, cfg.attn_softcap)
+    logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgt,bhtd->bhgd", probs, v.astype(jnp.float32))
+    out = out.reshape(b, 1, hq * hd).astype(h.dtype)
+    return out @ p["wo"], new_state
+
+
+def decode_step(cfg: ArchConfig, params, token: jnp.ndarray,
+                state: Dict[str, Any],
+                enc_out: Optional[jnp.ndarray] = None,
+                mesh_axes=None) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """token (B, 1) int32 → (logits (B, 1, V), new state)."""
+    b = token.shape[0]
+    pos = state["pos"]
+    x = params["embed"][token]
+    kinds = cfg.blocks()
+    new_layer_states = []
+    for li, p in enumerate(params["layers"]):
+        st = state["layers"][li]
+        h = L.rms_norm(x, p["ln1"])
+        kind = kinds[li]
+        if kind in (BlockKind.ATTN, BlockKind.MOE, BlockKind.LOCAL_ATTN):
+            window = cfg.sliding_window if kind == BlockKind.LOCAL_ATTN else None
+            attn_out, new_st = _decode_attn(
+                cfg, p["attn"], h, st, pos, window,
+                ring=kind == BlockKind.LOCAL_ATTN)
+            x = x + attn_out
+            if enc_out is not None and "xattn" in p:
+                hx = L.rms_norm(x, p["ln_x"])
+                hkv, hd = cfg.n_kv_heads, cfg.hd
+                ek = (enc_out @ p["xattn"]["wk"]).reshape(
+                    b, -1, hkv, hd).transpose(0, 2, 1, 3)
+                ev = (enc_out @ p["xattn"]["wv"]).reshape(
+                    b, -1, hkv, hd).transpose(0, 2, 1, 3)
+                posb = jnp.full((b, 1), pos, jnp.int32)
+                cross_out, _ = L.attention(cfg, p["xattn"], hx, posb,
+                                           cross_kv=(ek, ev))
+                x = x + cross_out
+            h2 = L.rms_norm(x, p["ln2"])
+            if kind == BlockKind.MOE:
+                ffn_out, _ = L.moe_ffn(cfg, p["moe"], h2)
+            elif "mlp" in p:
+                ffn_out = L.mlp(p["mlp"], h2)
+            else:
+                ffn_out = jnp.zeros_like(x)
+            x = x + ffn_out
+        elif kind == BlockKind.MLSTM:
+            y, new_st = R.mlstm_step(p["mlstm"], h, st, cfg.n_heads)
+            x = x + y
+            if "mlp" in p:
+                x = x + L.mlp(p["mlp"], L.rms_norm(x, p["ln2"]))
+        elif kind == BlockKind.SLSTM:
+            y, new_st = R.slstm_step(p["slstm"], h, st)
+            x = x + y
+            if "mlp" in p:
+                x = x + L.mlp(p["mlp"], L.rms_norm(x, p["ln2"]))
+        elif kind == BlockKind.RGLRU:
+            rp = p["rec"]
+            gate = jax.nn.gelu(h @ rp["w_branch_gate"])
+            lin = h @ rp["w_branch_lin"]
+            lin, conv_st = R.temporal_conv_step(rp, lin, st["conv"],
+                                                cfg.conv_width)
+            rec, h_st = R.rglru_step(rp, lin, st["h"])
+            new_st = {"h": h_st, "conv": conv_st}
+            x = x + (gate * rec) @ rp["w_out"]
+            if "mlp" in p:
+                x = x + L.mlp(p["mlp"], L.rms_norm(x, p["ln2"]))
+        new_layer_states.append(new_st)
+
+    x = L.rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = L.matmul(x, head)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits, {"pos": pos + 1, "layers": new_layer_states}

@@ -1,0 +1,5 @@
+from repro.runtime.supervisor import (
+    Supervisor, SupervisorConfig, ElasticMesh, RunState,
+)
+
+__all__ = ["Supervisor", "SupervisorConfig", "ElasticMesh", "RunState"]

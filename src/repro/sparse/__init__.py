@@ -1,0 +1,36 @@
+"""Sparse matrix substrate: formats, converters, reference SpGEMM.
+
+Host-side structures are numpy (they live on the CPU tier of the memory
+hierarchy, exactly like the paper's CSR-A host staging); device-side
+structures are JAX arrays with static shapes (BlockELL).
+"""
+from repro.sparse.formats import (
+    CSR,
+    CSC,
+    COO,
+    BlockELL,
+    csr_from_dense,
+    csc_from_dense,
+    csr_to_dense,
+    csc_to_dense,
+    csr_to_csc,
+    csr_row_slice,
+)
+from repro.sparse.blocking import (
+    tile_csr_to_block_ell,
+    block_ell_to_dense,
+    round_up,
+)
+from repro.sparse.ref_spgemm import (
+    spgemm_csr_dense,
+    spgemm_csr_csc,
+    spmm_dense_ref,
+)
+
+__all__ = [
+    "CSR", "CSC", "COO", "BlockELL",
+    "csr_from_dense", "csc_from_dense", "csr_to_dense", "csc_to_dense",
+    "csr_to_csc", "csr_row_slice",
+    "tile_csr_to_block_ell", "block_ell_to_dense", "round_up",
+    "spgemm_csr_dense", "spgemm_csr_csc", "spmm_dense_ref",
+]

@@ -1,0 +1,96 @@
+"""RoBW-128 tile densification: CSR row blocks → BlockELL bricks.
+
+This is the Phase-I CPU preprocessing of the paper (Fig. 5) adapted to TPU:
+instead of shipping ragged CSR triples, the host scatters each row block's
+nonzeros into dense (bm, bk) column-tile bricks that the MXU can consume
+directly, and records the tile topology (col_tile ids) for scalar prefetch.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from repro.sparse.formats import CSR, BlockELL
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def tile_csr_to_block_ell(
+    a: CSR,
+    bm: int = 128,
+    bk: int = 128,
+    ell_width: Optional[int] = None,
+    dtype: np.dtype = np.float32,
+) -> BlockELL:
+    """Densify CSR into MXU-aligned block-ELL.
+
+    ell_width: max nonzero column tiles kept per row block. None → the true
+    max over this segment (exact). If a row block has more populated tiles
+    than ell_width, the *least-populated* tiles are dropped — callers that
+    need exactness must pass ell_width=None or a verified bucket capacity
+    (the memory model guarantees this for AIRES schedules; tests assert it).
+    """
+    n_rows, n_cols = a.shape
+    n_row_blocks = max(1, (n_rows + bm - 1) // bm)
+    n_col_tiles = (n_cols + bk - 1) // bk
+
+    # Pass 1: per-row-block tile occupancy (host-side, vectorized numpy).
+    per_block_tiles: List[np.ndarray] = []
+    per_block_counts: List[np.ndarray] = []
+    for rb in range(n_row_blocks):
+        lo = a.indptr[min(rb * bm, n_rows)]
+        hi = a.indptr[min((rb + 1) * bm, n_rows)]
+        tiles = a.indices[lo:hi] // bk
+        uniq, counts = np.unique(tiles, return_counts=True)
+        per_block_tiles.append(uniq)
+        per_block_counts.append(counts)
+
+    true_width = max((t.shape[0] for t in per_block_tiles), default=0)
+    if ell_width is None:
+        ell_width = max(1, true_width)
+    ell_width = max(1, min(ell_width, n_col_tiles))
+
+    blocks = np.zeros((n_row_blocks, ell_width, bm, bk), dtype=dtype)
+    col_tile = np.full((n_row_blocks, ell_width), -1, dtype=np.int32)
+    n_tiles = np.zeros((n_row_blocks,), dtype=np.int32)
+
+    for rb in range(n_row_blocks):
+        uniq, counts = per_block_tiles[rb], per_block_counts[rb]
+        if uniq.shape[0] > ell_width:
+            # Keep the most-populated tiles (drop the tail). AIRES schedules
+            # never hit this branch (bucket capacity ≥ true width).
+            keep = np.argsort(-counts, kind="stable")[:ell_width]
+            uniq = np.sort(uniq[keep])
+        col_tile[rb, : uniq.shape[0]] = uniq
+        n_tiles[rb] = uniq.shape[0]
+
+        r0, r1 = rb * bm, min((rb + 1) * bm, n_rows)
+        for i in range(r0, r1):
+            lo, hi = a.indptr[i], a.indptr[i + 1]
+            cols = a.indices[lo:hi]
+            vals = a.data[lo:hi]
+            t = cols // bk
+            # vectorized scatter per kept tile
+            for s, tile_id in enumerate(uniq):
+                m = t == tile_id
+                if m.any():
+                    blocks[rb, s, i - r0, cols[m] - tile_id * bk] = vals[m]
+
+    return BlockELL(blocks=blocks, col_tile=col_tile, n_tiles=n_tiles,
+                    bm=bm, bk=bk, n_rows=n_rows, n_cols=n_cols)
+
+
+def block_ell_to_dense(e: BlockELL) -> np.ndarray:
+    """Inverse of tile_csr_to_block_ell (for oracles/tests)."""
+    n_rows_pad = e.n_row_blocks * e.bm
+    n_cols_pad = round_up(e.n_cols, e.bk)
+    out = np.zeros((n_rows_pad, n_cols_pad), dtype=e.blocks.dtype)
+    for rb in range(e.n_row_blocks):
+        for s in range(int(e.n_tiles[rb])):
+            t = int(e.col_tile[rb, s])
+            out[rb * e.bm : (rb + 1) * e.bm, t * e.bk : (t + 1) * e.bk] += \
+                e.blocks[rb, s]
+    return out[: e.n_rows, : e.n_cols]

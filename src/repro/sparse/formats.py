@@ -1,0 +1,191 @@
+"""Compressed sparse formats (paper §II-B, Fig. 2).
+
+CSR/CSC/COO are host-tier containers (numpy) — they model the paper's
+host-memory staging of compressed data. BlockELL (see blocking.py) is the
+device-tier, MXU-aligned format produced by RoBW preprocessing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CSR:
+    """Compressed sparse row: A[i, indices[indptr[i]:indptr[i+1]]] = data[...]."""
+
+    indptr: np.ndarray   # (n_rows + 1,) int
+    indices: np.ndarray  # (nnz,) int — column ids
+    data: np.ndarray     # (nnz,) value dtype
+    shape: Tuple[int, int]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def n_rows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def n_cols(self) -> int:
+        return self.shape[1]
+
+    def nbytes(self, index_bytes: int = 4) -> int:
+        """Host/device footprint of the compressed representation."""
+        return int(
+            self.indptr.shape[0] * index_bytes
+            + self.indices.shape[0] * index_bytes
+            + self.data.shape[0] * self.data.dtype.itemsize
+        )
+
+    def row_nnz(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    def validate(self) -> None:
+        assert self.indptr.ndim == 1 and self.indptr.shape[0] == self.shape[0] + 1
+        assert self.indptr[0] == 0 and self.indptr[-1] == self.nnz
+        assert np.all(np.diff(self.indptr) >= 0), "indptr must be monotone"
+        if self.nnz:
+            assert self.indices.min() >= 0 and self.indices.max() < self.shape[1]
+
+
+@dataclasses.dataclass
+class CSC:
+    """Compressed sparse column (the paper's format for matrix B / features)."""
+
+    indptr: np.ndarray   # (n_cols + 1,)
+    indices: np.ndarray  # (nnz,) row ids
+    data: np.ndarray     # (nnz,)
+    shape: Tuple[int, int]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    def nbytes(self, index_bytes: int = 4) -> int:
+        return int(
+            self.indptr.shape[0] * index_bytes
+            + self.indices.shape[0] * index_bytes
+            + self.data.shape[0] * self.data.dtype.itemsize
+        )
+
+
+@dataclasses.dataclass
+class COO:
+    rows: np.ndarray
+    cols: np.ndarray
+    data: np.ndarray
+    shape: Tuple[int, int]
+
+    def to_csr(self) -> CSR:
+        order = np.lexsort((self.cols, self.rows))
+        rows, cols, data = self.rows[order], self.cols[order], self.data[order]
+        indptr = np.zeros(self.shape[0] + 1, dtype=np.int64)
+        np.add.at(indptr, rows + 1, 1)
+        indptr = np.cumsum(indptr)
+        return CSR(indptr=indptr, indices=cols.astype(np.int64), data=data,
+                   shape=self.shape)
+
+
+@dataclasses.dataclass
+class BlockELL:
+    """Device-tier block-ELL: the RoBW-128 tile-densified format (DESIGN §2).
+
+    A row-block segment holds, for each of its `n_row_blocks` row blocks of
+    `bm` rows, a fixed budget of `ell_width` column tiles of `bk` columns:
+
+      blocks:   (n_row_blocks, ell_width, bm, bk)  dense value bricks
+      col_tile: (n_row_blocks, ell_width) int32    column-tile index (-1 = pad)
+      n_tiles:  (n_row_blocks,) int32              valid tiles per row block
+
+    Static shapes → XLA-friendly; padding bricks are zero so the matmul is
+    exact. ell_width is the "bucket capacity" chosen by the memory model —
+    the TPU adaptation of the paper's dynamic output allocation.
+    """
+
+    blocks: np.ndarray
+    col_tile: np.ndarray
+    n_tiles: np.ndarray
+    bm: int
+    bk: int
+    n_rows: int   # un-padded logical rows covered by this segment
+    n_cols: int   # logical column count of A
+
+    @property
+    def n_row_blocks(self) -> int:
+        return int(self.blocks.shape[0])
+
+    @property
+    def ell_width(self) -> int:
+        return int(self.blocks.shape[1])
+
+    def nbytes(self) -> int:
+        return int(self.blocks.nbytes + self.col_tile.nbytes + self.n_tiles.nbytes)
+
+
+def csr_from_dense(dense: np.ndarray) -> CSR:
+    rows, cols = np.nonzero(dense)
+    data = dense[rows, cols]
+    indptr = np.zeros(dense.shape[0] + 1, dtype=np.int64)
+    np.add.at(indptr, rows + 1, 1)
+    indptr = np.cumsum(indptr)
+    return CSR(indptr=indptr, indices=cols.astype(np.int64), data=data,
+               shape=dense.shape)
+
+
+def csc_from_dense(dense: np.ndarray) -> CSC:
+    csr_t = csr_from_dense(dense.T)
+    return CSC(indptr=csr_t.indptr, indices=csr_t.indices, data=csr_t.data,
+               shape=dense.shape)
+
+
+def csr_to_dense(a: CSR) -> np.ndarray:
+    out = np.zeros(a.shape, dtype=a.data.dtype)
+    for i in range(a.shape[0]):
+        lo, hi = a.indptr[i], a.indptr[i + 1]
+        out[i, a.indices[lo:hi]] = a.data[lo:hi]
+    return out
+
+
+def csc_to_dense(b: CSC) -> np.ndarray:
+    out = np.zeros(b.shape, dtype=b.data.dtype)
+    for j in range(b.shape[1]):
+        lo, hi = b.indptr[j], b.indptr[j + 1]
+        out[b.indices[lo:hi], j] = b.data[lo:hi]
+    return out
+
+
+def csr_to_csc(a: CSR) -> CSC:
+    """Transpose-free CSR→CSC re-index (counting sort by column)."""
+    n_rows, n_cols = a.shape
+    counts = np.zeros(n_cols + 1, dtype=np.int64)
+    np.add.at(counts, a.indices + 1, 1)
+    indptr = np.cumsum(counts)
+    indices = np.empty(a.nnz, dtype=np.int64)
+    data = np.empty(a.nnz, dtype=a.data.dtype)
+    cursor = indptr[:-1].copy()
+    for i in range(n_rows):
+        lo, hi = a.indptr[i], a.indptr[i + 1]
+        for k in range(lo, hi):
+            j = a.indices[k]
+            dst = cursor[j]
+            indices[dst] = i
+            data[dst] = a.data[k]
+            cursor[j] += 1
+    return CSC(indptr=indptr, indices=indices, data=data, shape=a.shape)
+
+
+def csr_row_slice(a: CSR, start: int, stop: int) -> CSR:
+    """Complete-row slice a[start:stop, :] — the RoBW segment extractor.
+
+    By construction this never splits a row: the returned segment is exactly
+    the paper's 'complete and unfragmented' block (Fig. 4 bottom).
+    """
+    stop = min(stop, a.n_rows)
+    lo, hi = a.indptr[start], a.indptr[stop]
+    indptr = (a.indptr[start : stop + 1] - lo).astype(a.indptr.dtype)
+    return CSR(indptr=indptr, indices=a.indices[lo:hi].copy(),
+               data=a.data[lo:hi].copy(), shape=(stop - start, a.n_cols))

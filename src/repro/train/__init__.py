@@ -1,0 +1,13 @@
+from repro.train.optim import (
+    adamw_init, adamw_update, adafactor_init, adafactor_update,
+    OPTIMIZERS, make_optimizer,
+)
+from repro.train.compression import compress_grads, decompress_grads, ef_init
+from repro.train.loop import TrainLoopConfig, make_train_step, train_loop
+
+__all__ = [
+    "adamw_init", "adamw_update", "adafactor_init", "adafactor_update",
+    "OPTIMIZERS", "make_optimizer",
+    "compress_grads", "decompress_grads", "ef_init",
+    "TrainLoopConfig", "make_train_step", "train_loop",
+]

@@ -1,0 +1,51 @@
+"""int8 error-feedback gradient compression for the DP all-reduce.
+
+At 512 chips the data-parallel gradient all-reduce moves |params| bytes per
+step per device; int8 quantization cuts it 4× (vs f32) / 2× (vs bf16).
+Error feedback keeps the quantization *unbiased over time*: the residual
+from step t is added back before quantizing at t+1, so SGD/Adam see a
+telescoping sum whose error stays bounded — the standard EF-SGD argument.
+
+Usage inside a train step:
+    q, scales, ef_new = compress_grads(grads, ef)
+    q_sum = jax.lax.psum(q.astype(jnp.int32), axis)   # int32 accumulate
+    grads = decompress_grads(q_sum, scale_sum, n_replicas)
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def _quantize(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_grads(grads, ef):
+    """Returns (int8 tree, scale tree, new error-feedback tree)."""
+    def comp(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, scale = _quantize(corrected)
+        recon = q.astype(jnp.float32) * scale
+        return q, scale, corrected - recon
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = tdef.flatten_up_to(ef)
+    out = [comp(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]),
+            tdef.unflatten([o[2] for o in out]))
+
+
+def decompress_grads(q_tree, scale_tree, dtype=jnp.float32):
+    return jax.tree_util.tree_map(
+        lambda q, s: q.astype(jnp.float32) * s, q_tree, scale_tree)

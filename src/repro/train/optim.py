@@ -1,0 +1,122 @@
+"""Optimizers in pure JAX (no optax dependency).
+
+AdamW for ≤30B-class models; Adafactor (factored second moment, no first
+moment by default) for the 1T-parameter MoE — at that scale full Adam
+moments (8 bytes/param fp32) exceed 512×16 GB HBM, while factored stats are
+O(rows+cols). The launcher picks per-arch (configs set stream_weights/size).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- AdamW ----
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.01):
+    step = state["step"] + 1
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * jnp.square(g32)
+        update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+        p_new = p.astype(jnp.float32) - lr * (update + weight_decay * p.astype(jnp.float32))
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}
+
+
+# ------------------------------------------------------------ Adafactor ----
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params):
+    def stat(p):
+        if _factored(p.shape):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),       # row stats
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+    return {
+        "stats": jax.tree_util.tree_map(
+            stat, params, is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(params, grads, state, lr=1e-2, decay=0.8, eps=1e-30,
+                     clip_threshold=1.0, weight_decay=0.0):
+    step = state["step"] + 1
+    beta = 1.0 - step.astype(jnp.float32) ** -decay
+
+    def upd(p, g, s):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + eps
+        if _factored(p.shape):
+            vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+            denom = jnp.mean(vr, axis=-1, keepdims=True)
+            r = (vr / jnp.maximum(denom, eps))[..., None]
+            u = g32 * jax.lax.rsqrt(jnp.maximum(r, eps)) * \
+                jax.lax.rsqrt(jnp.maximum(vc[..., None, :], eps))
+            new_s = {"vr": vr, "vc": vc}
+        else:
+            v = beta * s["v"] + (1 - beta) * g2
+            u = g32 * jax.lax.rsqrt(jnp.maximum(v, eps))
+            new_s = {"v": v}
+        # Update clipping (RMS ≤ clip_threshold).
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        p_new = p.astype(jnp.float32) - lr * (u + weight_decay * p.astype(jnp.float32))
+        return p_new.astype(p.dtype), new_s
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_s = tdef.flatten_up_to(state["stats"])
+    out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_s = tdef.unflatten([o[1] for o in out])
+    return new_p, {"stats": new_s, "step": step}
+
+
+OPTIMIZERS: Dict[str, Tuple[Callable, Callable]] = {
+    "adamw": (adamw_init, adamw_update),
+    "adafactor": (adafactor_init, adafactor_update),
+}
+
+
+def make_optimizer(name: str, **hyper):
+    init_fn, update_fn = OPTIMIZERS[name]
+
+    def update(params, grads, state):
+        return update_fn(params, grads, state, **hyper)
+
+    return init_fn, update

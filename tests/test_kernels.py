@@ -1,0 +1,132 @@
+"""Per-kernel correctness sweeps: Pallas (interpret=True) vs ref.py oracle."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import bcsr_spmm, decode_attention, fused_gcn_layer
+from repro.kernels.ref import decode_attention_ref
+from repro.sparse import csr_from_dense, tile_csr_to_block_ell
+
+
+def _rand_sparse(n, m, density, dtype, seed):
+    rng = np.random.default_rng(seed)
+    dense = ((rng.random((n, m)) < density)
+             * rng.standard_normal((n, m))).astype(dtype)
+    return dense
+
+
+@pytest.mark.parametrize("n,m,f", [(16, 16, 8), (40, 24, 16), (64, 64, 32),
+                                   (33, 57, 24)])
+@pytest.mark.parametrize("density", [0.05, 0.3])
+def test_bcsr_spmm_shapes(n, m, f, density):
+    dense = _rand_sparse(n, m, density, np.float32, seed=n * m + f)
+    a = csr_from_dense(dense)
+    ell = tile_csr_to_block_ell(a, bm=8, bk=8)
+    h = np.random.default_rng(1).standard_normal((m, f)).astype(np.float32)
+    out = np.asarray(bcsr_spmm(ell, jnp.asarray(h), bn=8))
+    np.testing.assert_allclose(out, dense @ h, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_bcsr_spmm_dtypes(dtype):
+    dense = _rand_sparse(32, 32, 0.2, np.float32, seed=7).astype(dtype)
+    a = csr_from_dense(dense)
+    ell = tile_csr_to_block_ell(a, bm=8, bk=8, dtype=dtype)
+    h = np.random.default_rng(2).standard_normal((32, 16)).astype(dtype)
+    out = np.asarray(bcsr_spmm(ell, jnp.asarray(h), bn=8))
+    np.testing.assert_allclose(
+        out, dense.astype(np.float32) @ h.astype(np.float32),
+        atol=1e-2 if dtype == np.float16 else 1e-4)
+
+
+def test_bcsr_spmm_empty_rows():
+    dense = np.zeros((24, 24), np.float32)
+    dense[3, 5] = 2.0  # single nonzero
+    a = csr_from_dense(dense)
+    ell = tile_csr_to_block_ell(a, bm=8, bk=8)
+    h = np.ones((24, 8), np.float32)
+    out = np.asarray(bcsr_spmm(ell, jnp.asarray(h), bn=8))
+    np.testing.assert_allclose(out, dense @ h, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,f,fo", [(24, 16, 8), (40, 24, 16)])
+def test_fused_gcn_layer(n, f, fo):
+    dense = _rand_sparse(n, n, 0.2, np.float32, seed=n)
+    a = csr_from_dense(dense)
+    ell = tile_csr_to_block_ell(a, bm=8, bk=8)
+    rng = np.random.default_rng(5)
+    h = rng.standard_normal((n, f)).astype(np.float32)
+    w = rng.standard_normal((f, fo)).astype(np.float32)
+    b = rng.standard_normal((fo,)).astype(np.float32)
+    out = np.asarray(fused_gcn_layer(ell, jnp.asarray(h), jnp.asarray(w),
+                                     jnp.asarray(b)))
+    ref = np.maximum(dense @ h @ w + b, 0)
+    np.testing.assert_allclose(out, ref, atol=1e-3)
+
+
+@pytest.mark.parametrize("b,nq,nkv,s,d", [
+    (2, 8, 2, 64, 16), (1, 4, 4, 32, 8), (3, 16, 4, 48, 32),
+])
+def test_decode_attention(b, nq, nkv, s, d):
+    rng = np.random.default_rng(b * s)
+    q = rng.standard_normal((b, nq, d)).astype(np.float32)
+    k = rng.standard_normal((b, nkv, s, d)).astype(np.float32)
+    v = rng.standard_normal((b, nkv, s, d)).astype(np.float32)
+    lens = rng.integers(1, s + 1, size=(b,)).astype(np.int32)
+    out = np.asarray(decode_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(lens),
+        block_s=16))
+    ref = np.asarray(decode_attention_ref(
+        q.reshape(b, nkv, nq // nkv, d), k, v, lens)).reshape(b, nq, d)
+    np.testing.assert_allclose(out, ref, atol=1e-4)
+
+
+def test_decode_attention_full_vs_short_lens():
+    """Padding KV past `lens` must not change the result."""
+    rng = np.random.default_rng(0)
+    b, nq, nkv, s, d = 2, 4, 2, 32, 16
+    q = rng.standard_normal((b, nq, d)).astype(np.float32)
+    k = rng.standard_normal((b, nkv, s, d)).astype(np.float32)
+    v = rng.standard_normal((b, nkv, s, d)).astype(np.float32)
+    lens = np.array([10, 20], np.int32)
+    out1 = np.asarray(decode_attention(jnp.asarray(q), jnp.asarray(k),
+                                       jnp.asarray(v), jnp.asarray(lens),
+                                       block_s=8))
+    k2 = k.copy(); v2 = v.copy()
+    k2[:, :, 25:] = 999.0; v2[:, :, 25:] = -999.0  # poison beyond lens
+    out2 = np.asarray(decode_attention(jnp.asarray(q), jnp.asarray(k2),
+                                       jnp.asarray(v2), jnp.asarray(lens),
+                                       block_s=8))
+    np.testing.assert_allclose(out1, out2, atol=1e-5)
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 24), (False, 0)])
+@pytest.mark.parametrize("b,h,s,d", [(2, 3, 64, 16), (1, 2, 48, 32)])
+def test_flash_attention(b, h, s, d, causal, window):
+    from repro.kernels import flash_attention
+    from repro.kernels.ref import flash_attention_ref
+    rng = np.random.default_rng(b * s + d)
+    q = rng.standard_normal((b, h, s, d)).astype(np.float32)
+    k = rng.standard_normal((b, h, s, d)).astype(np.float32)
+    v = rng.standard_normal((b, h, s, d)).astype(np.float32)
+    out = np.asarray(flash_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+        causal=causal, window=window, block_q=16, block_k=16))
+    ref = np.asarray(flash_attention_ref(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+        causal=causal, window=window))
+    np.testing.assert_allclose(out, ref, atol=1e-4)
+
+
+def test_flash_attention_dtype_bf16():
+    from repro.kernels import flash_attention
+    from repro.kernels.ref import flash_attention_ref
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((1, 2, 32, 16)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 2, 32, 16)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 2, 32, 16)), jnp.bfloat16)
+    out = flash_attention(q, k, v, block_q=16, block_k=16)
+    ref = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=3e-2)

@@ -1,0 +1,66 @@
+"""Eq. (5)-(7) analytical memory model."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    FeatureSpec, calc_mem, ell_bucket_capacity, estimate_output_bytes,
+    estimate_resident_bytes, plan_memory_spec, required_bytes, segment_budget,
+)
+from repro.sparse import csr_from_dense
+
+
+@pytest.fixture
+def a():
+    rng = np.random.default_rng(0)
+    dense = (rng.random((200, 200)) < 0.05) * np.ones((200, 200), np.float32)
+    return csr_from_dense(dense)
+
+
+def test_eq6_resident():
+    assert estimate_resident_bytes(100, 50, 25) == 175
+
+
+def test_eq7_budget():
+    assert segment_budget(300, 60, 90) == 50.0
+
+
+def test_eq5_monotonic_in_density():
+    lo = estimate_output_bytes(1000_000, 1000_000, 99.0, 99.0)
+    hi = estimate_output_bytes(1000_000, 1000_000, 95.0, 99.0)
+    assert hi > lo > 0
+
+
+def test_calc_mem_matches_alg1():
+    # (k+1) row pointers + q (col ids + values)
+    assert calc_mem(10, 100, value_bytes=4, index_bytes=4) == 11 * 4 + 100 * 8
+
+
+def test_plan_feasibility_threshold(a):
+    feat = FeatureSpec(a.n_rows, 64, 4, sparsity_pct=99.0)
+    req = required_bytes(a, feat)
+    assert plan_memory_spec(a, feat, req).feasible
+    est = plan_memory_spec(a, feat, req * 0.01)
+    assert not est.feasible
+
+
+def test_plan_segment_budget_shrinks_with_memory(a):
+    feat = FeatureSpec(a.n_rows, 64, 4, sparsity_pct=99.0)
+    req = required_bytes(a, feat)
+    p_big = plan_memory_spec(a, feat, req).p
+    p_small = plan_memory_spec(a, feat, req * 0.7).p
+    assert p_big > p_small
+
+
+def test_feature_spec_compressed_vs_dense():
+    dense = FeatureSpec(1000, 256, 4, sparsity_pct=0.0)
+    sparse = FeatureSpec(1000, 256, 4, sparsity_pct=99.0)
+    assert dense.compressed_bytes == 1000 * 256 * 4
+    assert sparse.compressed_bytes < dense.compressed_bytes / 10
+
+
+def test_ell_bucket_capacity():
+    assert ell_bucket_capacity(0) == 1
+    assert ell_bucket_capacity(5) == 8
+    assert ell_bucket_capacity(8) == 8
+    assert ell_bucket_capacity(9) == 16
+    assert ell_bucket_capacity(5, buckets=[4, 12, 20]) == 12

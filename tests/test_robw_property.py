@@ -1,0 +1,86 @@
+"""Property-based tests (hypothesis) for the RoBW invariants — the
+algorithmic heart of the paper (Alg. 1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import robw_partition, naive_partition, calc_mem
+from repro.core.robw import segments_to_block_ell
+from repro.sparse import csr_from_dense, csr_row_slice, block_ell_to_dense
+
+
+@st.composite
+def sparse_matrices(draw):
+    n = draw(st.integers(8, 64))
+    m = draw(st.integers(8, 64))
+    density = draw(st.floats(0.01, 0.4))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    dense = (rng.random((n, m)) < density) * rng.standard_normal((n, m))
+    return csr_from_dense(dense.astype(np.float32)), dense.astype(np.float32)
+
+
+@settings(max_examples=30, deadline=None)
+@given(sparse_matrices(), st.integers(64, 4096))
+def test_robw_invariants(am, budget):
+    a, dense = am
+    plan = robw_partition(a, budget)
+    segs = plan.segments
+    # 1. Complete cover, in order, no overlap (no row ever split).
+    assert segs[0].row_start == 0 and segs[-1].row_end == a.n_rows
+    for s1, s2 in zip(segs, segs[1:]):
+        assert s1.row_end == s2.row_start
+    # 2. Budget respected unless a single row alone exceeds it.
+    for seg in segs:
+        if seg.n_rows > 1:
+            assert seg.nbytes <= budget
+    # 3. Concatenating segments reproduces A exactly.
+    parts = [csr_row_slice(a, s.row_start, s.row_end) for s in segs]
+    rebuilt_nnz = sum(p.nnz for p in parts)
+    assert rebuilt_nnz == a.nnz
+    rebuilt = np.concatenate([
+        np.concatenate([p.data[p.indptr[i]:p.indptr[i+1]]
+                        for i in range(p.n_rows)]) if p.nnz else np.empty(0, np.float32)
+        for p in parts]) if a.nnz else np.empty(0, np.float32)
+    np.testing.assert_array_equal(rebuilt, a.data)
+
+
+@settings(max_examples=30, deadline=None)
+@given(sparse_matrices(), st.integers(2, 16), st.integers(64, 4096))
+def test_robw_alignment(am, align, budget):
+    a, _ = am
+    plan = robw_partition(a, budget, align=align)
+    for seg in plan.segments[:-1]:
+        # aligned unless the budget forced a sub-align block
+        assert seg.n_rows % align == 0 or seg.nbytes >= budget // 2 or seg.n_rows == 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(sparse_matrices(), st.integers(128, 2048))
+def test_naive_partition_covers_and_flags(am, budget):
+    a, _ = am
+    cuts = naive_partition(a, budget)
+    assert cuts[0][0] == 0 and cuts[-1][1] == a.nnz
+    for (lo, hi, *_), (lo2, *_rest) in zip(cuts, cuts[1:]):
+        assert hi == lo2
+    # any interior cut not on a row boundary must be flagged partial
+    boundaries = set(a.indptr.tolist())
+    for i, (lo, hi, first_partial, last_partial) in enumerate(cuts[:-1]):
+        if hi not in boundaries:
+            assert last_partial
+
+
+@settings(max_examples=15, deadline=None)
+@given(sparse_matrices())
+def test_block_ell_roundtrip(am):
+    a, dense = am
+    plan = robw_partition(a, max(256, a.nbytes() // 3), align=8)
+    rows = 0
+    out = np.zeros_like(dense)
+    for seg, ell in zip(plan.segments,
+                        segments_to_block_ell(a, plan, bm=8, bk=8)):
+        block_dense = block_ell_to_dense(ell)
+        out[seg.row_start:seg.row_end] = block_dense[: seg.n_rows]
+        rows += seg.n_rows
+    assert rows == a.n_rows
+    np.testing.assert_allclose(out, dense, atol=1e-6)

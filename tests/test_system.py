@@ -1,0 +1,125 @@
+"""End-to-end behaviour tests for the AIRES system (paper-level claims).
+
+Each test maps to a paper artifact:
+  * RoBW removes merge events entirely (Fig. 3 mechanism)
+  * AIRES executes out-of-core SpGEMM exactly (correctness under streaming)
+  * scheduler ranking AIRES < ETC < UCG/MaxMemory at constraint budgets (Fig. 6)
+  * OOM ladder matches Table III
+  * transferred DMA+UM bytes drop vs MaxMemory (Fig. 7)
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    SCHEDULERS, FeatureSpec, required_bytes, AiresSpGEMM, AiresConfig,
+    plan_memory_spec,
+)
+from repro.data import SUITESPARSE_SPECS, generate_graph, normalized_adjacency, scaled_spec
+from repro.io.tiers import PAPER_GPU_SYSTEM
+from repro.sparse.ref_spgemm import spgemm_csr_dense
+
+
+@pytest.fixture(scope="module")
+def graph():
+    spec = scaled_spec(SUITESPARSE_SPECS["kV2a"], 2e-4)
+    a = normalized_adjacency(generate_graph(spec, seed=3))
+    a.validate()
+    return a
+
+
+@pytest.fixture(scope="module")
+def feats(graph):
+    rng = np.random.default_rng(0)
+    return rng.standard_normal((graph.n_rows, 16)).astype(np.float32)
+
+
+def _streaming_budget(graph, feats, a_frac=0.6):
+    """Budget that is feasible but forces ≥2 streamed segments."""
+    est = plan_memory_spec(graph, FeatureSpec.of(feats), float("inf"))
+    return int(est.m_b + est.m_c + a_frac * graph.nbytes())
+
+
+def test_aires_execute_exact(graph, feats):
+    budget = _streaming_budget(graph, feats)
+    res = SCHEDULERS["aires"](PAPER_GPU_SYSTEM, device_budget=budget).run(
+        graph, feats, mode="execute")
+    assert not res.metrics.oom
+    assert res.metrics.segments >= 2, "budget should force streaming"
+    ref = spgemm_csr_dense(graph, feats)
+    np.testing.assert_allclose(res.x, ref, atol=1e-4)
+
+
+def test_aires_no_merge_events(graph, feats):
+    budget = _streaming_budget(graph, feats)
+    res = SCHEDULERS["aires"](PAPER_GPU_SYSTEM, device_budget=budget).run(
+        graph, feats)
+    assert res.metrics.merge_events == 0
+    # The naive mechanism needs a budget whose static half is below |A|
+    # (policy off: this probes the mechanism, not Table III feasibility).
+    feat = FeatureSpec(graph.n_rows, 256, 4, sparsity_pct=99.0)
+    mm_sched = SCHEDULERS["maxmemory"](
+        PAPER_GPU_SYSTEM,
+        device_budget=int(required_bytes(graph, feat) * 0.55))
+    mm_sched.oom_fraction = 0.0
+    mm = mm_sched.run(graph, feat)
+    assert mm.metrics.merge_events > 0, "naive cuts must split rows"
+
+
+def test_fig6_ranking(graph):
+    feat = FeatureSpec(graph.n_rows, 256, 4, sparsity_pct=99.0)
+    req = required_bytes(graph, feat)
+    budget = int(0.9 * req)
+    spans = {}
+    for name in SCHEDULERS:
+        r = SCHEDULERS[name](PAPER_GPU_SYSTEM, device_budget=budget).run(
+            graph, feat, dataset="kV2a")
+        assert not r.metrics.oom, name
+        spans[name] = r.metrics.makespan_s
+    assert spans["aires"] < spans["etc"] < spans["maxmemory"]
+    assert spans["aires"] < spans["ucg"]
+    # paper: 1.5–1.8x class speedups
+    assert spans["maxmemory"] / spans["aires"] > 1.3
+
+
+def test_tableiii_oom_ladder(graph):
+    feat = FeatureSpec(graph.n_rows, 256, 4, sparsity_pct=99.0)
+    req = required_bytes(graph, feat)
+    est = plan_memory_spec(graph, feat, req)
+    aires_floor = (est.m_b + est.m_c) / req
+
+    def ooms(name, frac):
+        r = SCHEDULERS[name](PAPER_GPU_SYSTEM,
+                             device_budget=int(frac * req)).run(graph, feat)
+        return r.metrics.oom
+
+    # AIRES's Eq.7 floor must undercut ETC's 0.72 threshold.
+    assert aires_floor < 0.72
+    low = (aires_floor + 0.72) / 2
+    # ~0.9: everyone runs; ~0.8: only ETC+AIRES; low rung: only AIRES.
+    assert not any(ooms(n, 0.9) for n in SCHEDULERS)
+    assert ooms("maxmemory", 0.8) and ooms("ucg", 0.8)
+    assert not ooms("etc", 0.8) and not ooms("aires", 0.8)
+    assert ooms("etc", low) and not ooms("aires", low)
+
+
+def test_fig7_byte_reduction(graph):
+    feat = FeatureSpec(graph.n_rows, 256, 4, sparsity_pct=99.0)
+    req = required_bytes(graph, feat)
+    budget = int(0.9 * req)
+
+    def dma_um(name):
+        r = SCHEDULERS[name](PAPER_GPU_SYSTEM, device_budget=budget).run(
+            graph, feat)
+        return sum(v for k, v in r.metrics.bytes_by_path.items()
+                   if k in ("dma", "um"))
+
+    reduction = 1 - dma_um("aires") / dma_um("maxmemory")
+    assert reduction > 0.5, f"expected large DMA+UM reduction, got {reduction:.2f}"
+
+
+def test_streaming_engine_matches_oracle(graph, feats):
+    import jax.numpy as jnp
+    budget = _streaming_budget(graph, feats)
+    eng = AiresSpGEMM(AiresConfig(device_budget_bytes=budget, bm=8, bk=8))
+    x = np.asarray(eng(graph, jnp.asarray(feats)))
+    np.testing.assert_allclose(x, spgemm_csr_dense(graph, feats), atol=1e-4)
