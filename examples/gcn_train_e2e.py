@@ -56,9 +56,14 @@ for s in range(args.steps):
     if s % 25 == 0:
         print(f"step {s:>4d} loss {float(loss):.4f}")
     if s % args.out_of_core_every == 0:
-        # The AIRES streamed aggregation must agree with the in-core path.
+        # The AIRES streamed aggregation must agree with the in-core path —
+        # forward AND backward (the custom VJP streams Aᵀ for real).
         x_stream = engine(a, h0)
         x_ref = a_dense @ h0
         assert float(jnp.abs(x_stream - x_ref).max()) < 1e-3
+        g_stream = jax.grad(lambda h: jnp.sum(engine(a, h) ** 2))(h0)
+        g_ref = jax.grad(lambda h: jnp.sum((a_dense @ h) ** 2))(h0)
+        assert float(jnp.abs(g_stream - g_ref).max()) < 1e-2
+        assert engine.last_backward_stream_stats.segments >= 1
 print(f"final loss {float(loss):.4f} in {time.perf_counter()-t0:.1f}s "
       f"({args.steps} steps, out-of-core checks passed)")

@@ -24,6 +24,7 @@ from repro.core.robw import (
     merge_partial_rows,
     naive_partition,
     robw_partition,
+    robw_transpose_plan,
     segments_to_block_ell,
 )
 from repro.core.scheduler import (
@@ -43,7 +44,7 @@ __all__ = [
     "plan_memory_dense_features", "plan_memory_spec", "required_bytes",
     "segment_budget",
     "RoBWPlan", "RoBWSegment", "merge_partial_rows", "naive_partition",
-    "robw_partition", "segments_to_block_ell",
+    "robw_partition", "robw_transpose_plan", "segments_to_block_ell",
     "SCHEDULERS", "AiresScheduler", "ETCScheduler", "MaxMemoryScheduler",
     "ScheduleMetrics", "ScheduleResult", "UCGScheduler",
     "AiresConfig", "AiresSpGEMM", "EpochMetrics", "gcn_epoch",

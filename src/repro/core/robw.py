@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.core.memory_model import calc_mem, ell_bucket_capacity
 from repro.sparse.blocking import tile_csr_to_block_ell
-from repro.sparse.formats import CSR, BlockELL, csr_row_slice
+from repro.sparse.formats import CSR, BlockELL, csr_row_slice, csr_transpose
 
 
 @dataclasses.dataclass
@@ -102,6 +102,31 @@ def robw_partition(
         )
         start = end
     return RoBWPlan(segments=segments, align=align, budget_bytes=m_a_bytes)
+
+
+def robw_transpose_plan(
+    a: CSR,
+    m_a_bytes: int,
+    align: int = 1,
+    value_bytes: Optional[int] = None,
+    index_bytes: int = 4,
+    a_t: Optional[CSR] = None,
+) -> tuple:
+    """RoBW plan over Aᵀ — the backward-pass streaming schedule.
+
+    A GCN epoch's backward gradient dH = Aᵀ dX re-streams the adjacency in
+    transposed orientation. Materializing CSC of A as CSR of Aᵀ (one
+    counting sort) lets Algorithm 1 run unchanged: complete *columns* of A
+    become complete rows of Aᵀ, so the no-merge invariant carries over to
+    the backward stream. Returns (a_t, plan) where plan partitions a_t.
+    Pass a precomputed `a_t` to skip the transpose (callers that already
+    materialized it for planning or accounting).
+    """
+    if a_t is None:
+        a_t = csr_transpose(a)
+    plan = robw_partition(a_t, m_a_bytes, align=align,
+                          value_bytes=value_bytes, index_bytes=index_bytes)
+    return a_t, plan
 
 
 def naive_partition(a: CSR, m_a_bytes: int, value_bytes: Optional[int] = None,

@@ -2,29 +2,40 @@
 
 `AiresSpGEMM` wraps the full pipeline: Eq.5-7 planning → RoBW partitioning →
 tile densification → double-buffered streaming → Pallas block-ELL kernel.
+It is **differentiable**: a `jax.custom_vjp` computes dH = Aᵀ dX by
+streaming the transposed RoBW plan (`robw_transpose_plan`) through the same
+`DoubleBufferedStreamer`, so `jax.grad` through a GCN layer triggers real
+backward I/O instead of a modeled multiplier.
+
 `gcn_epoch` chains it through the Fig. 1 aggregation/combination chain for
-per-epoch latency accounting (forward + backward), which is what the paper's
-end-to-end figures measure.
+per-epoch latency accounting. In execute mode the epoch runs a true
+forward+backward pass (jax.vjp over the layer chain) and reports separate
+forward/backward `StreamStats`; simulate mode keeps the paper's
+`backward_factor` accounting for large-scale modeling.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, List, Literal, Optional
+from typing import Callable, Dict, List, Literal, Optional, Tuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.core.memory_model import plan_memory_dense_features
-from repro.core.robw import robw_partition, segments_to_block_ell
+from repro.core.robw import (
+    robw_partition,
+    robw_transpose_plan,
+    segments_to_block_ell,
+)
 from repro.core.scheduler import (
     AiresScheduler,
     ScheduleMetrics,
     ScheduleResult,
     SCHEDULERS,
 )
-from repro.io.streamer import DoubleBufferedStreamer
+from repro.io.streamer import DoubleBufferedStreamer, StreamStats
 from repro.io.tiers import TierSpec, TPU_V5E_SYSTEM
 from repro.sparse.formats import CSR
 
@@ -41,6 +52,17 @@ class AiresConfig:
     interpret: Optional[bool] = None  # None → auto (CPU container)
 
 
+@dataclasses.dataclass
+class _Prepared:
+    """Host-side artifacts of one streaming direction for one graph."""
+
+    a: CSR                    # the matrix actually streamed (A or Aᵀ)
+    mem: object               # MemoryEstimate
+    plan: object              # RoBWPlan
+    segs: List[object]
+    ells: List[object]
+
+
 class AiresSpGEMM:
     """Out-of-core X = A @ H with the AIRES schedule, executing for real.
 
@@ -48,10 +70,30 @@ class AiresSpGEMM:
     models large-scale latency; this class *runs* the streaming pipeline —
     `jax.device_put` uploads overlap kernel dispatch via JAX async dispatch,
     with the same RoBW plan and memory model.
+
+    Differentiation: `__call__` carries a custom VJP whose backward streams
+    the transposed plan (dH = Aᵀ dX), so autodiff through a GCN layer incurs
+    the paper's backward I/O for real. Per-call `StreamStats` accumulate in
+    `forward_stats_log` / `backward_stats_log` (cleared by
+    `reset_stats_logs`), with the most recent also on `last_stream_stats` /
+    `last_backward_stream_stats`.
     """
+
+    # Per-engine cap on cached (graph × shape × direction) preparations.
+    # Densified BlockELL tiles outweigh the source CSR, so the cache is a
+    # small LRU rather than unbounded — epoch loops reuse a handful of
+    # entries (one per layer width per direction) and multi-graph training
+    # evicts instead of growing without bound.
+    PREPARED_CACHE_MAX = 8
 
     def __init__(self, config: AiresConfig):
         self.config = config
+        self._prepared: Dict[tuple, _Prepared] = {}
+        self._transposes: Dict[tuple, Tuple[CSR, CSR]] = {}
+        self.forward_stats_log: List[StreamStats] = []
+        self.backward_stats_log: List[StreamStats] = []
+        self.last_stream_stats: Optional[StreamStats] = None
+        self.last_backward_stream_stats: Optional[StreamStats] = None
 
     def plan(self, a: CSR, h_shape) -> tuple:
         mem = plan_memory_dense_features(
@@ -64,15 +106,87 @@ class AiresSpGEMM:
         plan = robw_partition(a, int(mem.m_a), align=self.config.align)
         return mem, plan
 
-    def __call__(self, a: CSR, h: jax.Array) -> jax.Array:
-        from repro.kernels import bcsr_spmm
+    def reset_stats_logs(self) -> None:
+        self.forward_stats_log = []
+        self.backward_stats_log = []
 
+    def clear_cache(self) -> None:
+        """Drop all cached plans/densified tiles (and memoized transposes)."""
+        self._prepared.clear()
+        self._transposes.clear()
+
+    # ---- host-side preparation (cached per graph × feature shape) --------
+    #
+    # CSR inputs are treated as IMMUTABLE: the cache key covers identity and
+    # structure (id, nnz, shape), not values, so mutating a.data in place
+    # between calls would serve stale densified tiles. Re-weighted graphs
+    # must be new CSR objects (or call clear_cache()).
+
+    def transpose_of(self, a: CSR) -> CSR:
+        """Memoized Aᵀ — shared by backward streaming and epoch accounting.
+
+        Entries hold a reference to their source CSR, so an id() can never
+        be recycled into a stale hit while the entry lives; the memo is
+        LRU-bounded like `_prepared`.
+        """
+        key = (id(a), a.nnz, a.shape)
+        hit = self._transposes.pop(key, None)
+        if hit is not None and hit[0] is a:
+            self._transposes[key] = hit  # re-insert: most-recently-used
+            return hit[1]
+        from repro.sparse.formats import csr_transpose
+        a_t = csr_transpose(a)
+        self._transposes[key] = (a, a_t)
+        while len(self._transposes) > self.PREPARED_CACHE_MAX:
+            self._transposes.pop(next(iter(self._transposes)))
+        return a_t
+
+    def _prepare(self, a: CSR, dense_shape, transpose: bool) -> _Prepared:
+        """Plan + densify one streaming direction; LRU-cached for epoch
+        reuse (see the immutability note above)."""
+        key = (id(a), a.nnz, a.shape, tuple(dense_shape), transpose)
+        hit = self._prepared.pop(key, None)
+        if hit is not None:
+            self._prepared[key] = hit  # re-insert: most-recently-used
+            return hit
         cfg = self.config
-        mem, plan = self.plan(a, h.shape)
-        h_dev = jax.device_put(h)  # Phase I: resident feature matrix
+        if transpose:
+            # Plan on Aᵀ: the backward output dH is (n_cols, F), so M_C and
+            # the Eq. 7 segment budget must be sized for the transposed
+            # orientation (they differ whenever A is non-square).
+            a_t = self.transpose_of(a)
+            mem = plan_memory_dense_features(
+                a_t, n_nodes=dense_shape[0], feature_dim=dense_shape[1],
+                m_total=cfg.device_budget_bytes)
+            if not mem.feasible:
+                raise MemoryError(
+                    "AIRES backward plan infeasible: budget "
+                    f"{cfg.device_budget_bytes} < M_B+M_C = "
+                    f"{mem.m_b + mem.m_c:.0f}")
+            _, plan = robw_transpose_plan(a, int(mem.m_a), align=cfg.align,
+                                          a_t=a_t)
+            stream_a = a_t
+        else:
+            mem, plan = self.plan(a, dense_shape)
+            stream_a = a
+        prepared = _Prepared(
+            a=stream_a, mem=mem, plan=plan, segs=list(plan.segments),
+            ells=list(segments_to_block_ell(stream_a, plan,
+                                            bm=cfg.bm, bk=cfg.bk)))
+        self._prepared[key] = prepared
+        while len(self._prepared) > self.PREPARED_CACHE_MAX:
+            self._prepared.pop(next(iter(self._prepared)))
+        return prepared
 
-        segs = list(plan.segments)
-        ells = segments_to_block_ell(a, plan, bm=cfg.bm, bk=cfg.bk)
+    # ---- streaming executors --------------------------------------------
+
+    def _stream(self, prepared: _Prepared, consume_one: Callable) -> tuple:
+        """Run one double-buffered pass over `prepared`'s segments.
+
+        consume_one(ell_dev, i) -> per-segment device result. Returns
+        (row-concatenated output, StreamStats).
+        """
+        cfg = self.config
 
         def upload(ell):
             return (
@@ -86,15 +200,118 @@ class AiresSpGEMM:
             blocks, col_tile, n_tiles, ell = dev_payload
             ell_dev = dataclasses.replace(
                 ell, blocks=blocks, col_tile=col_tile, n_tiles=n_tiles)
-            return bcsr_spmm(ell_dev, h_dev, interpret=cfg.interpret)
+            return consume_one(ell_dev, i)
 
         streamer = DoubleBufferedStreamer(
             upload, consume, depth=cfg.stream_depth,
-            deadline_s=cfg.straggler_deadline_s)
-        parts = streamer.run_all(ells)
-        x = jnp.concatenate([p[: s.n_rows] for p, s in zip(parts, segs)], axis=0)
-        self.last_stream_stats = streamer.stats
-        return x
+            deadline_s=cfg.straggler_deadline_s,
+            payload_nbytes=lambda ell: ell.nbytes())
+        parts = streamer.run_all(prepared.ells)
+        out = jnp.concatenate(
+            [p[: s.n_rows] for p, s in zip(parts, prepared.segs)], axis=0)
+        return out, streamer.stats
+
+    def _stream_spmm(self, prepared: _Prepared, dense) -> tuple:
+        """X = stream(A) @ dense — shared by forward and transposed passes."""
+        from repro.kernels import bcsr_spmm
+
+        cfg = self.config
+        dense_dev = jax.device_put(dense)  # Phase I: resident feature matrix
+        return self._stream(
+            prepared,
+            lambda ell_dev, i: bcsr_spmm(ell_dev, dense_dev,
+                                         interpret=cfg.interpret))
+
+    # ---- differentiable public API --------------------------------------
+
+    def __call__(self, a: CSR, h: jax.Array) -> jax.Array:
+        """X = A @ H, differentiable w.r.t. H (dH streams Aᵀ)."""
+        h = jnp.asarray(h)
+        fwd = self._prepare(a, h.shape, transpose=False)
+        h_dtype = h.dtype
+
+        def run_forward(h_in):
+            x, stats = self._stream_spmm(fwd, h_in)
+            self.last_stream_stats = stats
+            self.forward_stats_log.append(stats)
+            return x
+
+        @jax.custom_vjp
+        def spgemm(h_in):
+            return run_forward(h_in)
+
+        def spgemm_fwd(h_in):
+            return run_forward(h_in), None
+
+        def spgemm_bwd(_, g):
+            dh = self._backward_stream(a, g)
+            return (dh.astype(h_dtype),)
+
+        spgemm.defvjp(spgemm_fwd, spgemm_bwd)
+        return spgemm(h)
+
+    def _backward_stream(self, a: CSR, g) -> jax.Array:
+        """dH = Aᵀ @ g via the transposed RoBW plan, with stats recorded."""
+        g = jnp.asarray(g)
+        bwd = self._prepare(a, g.shape, transpose=True)
+        dh, stats = self._stream_spmm(bwd, g)
+        self.last_backward_stream_stats = stats
+        self.backward_stats_log.append(stats)
+        return dh
+
+    def gcn_layer(self, a: CSR, h: jax.Array, w: jax.Array,
+                  b: jax.Array) -> jax.Array:
+        """Differentiable fused layer Y = σ((A H) W + b), Fig. 1 chain.
+
+        Forward streams the fused Pallas kernel — the aggregation X never
+        round-trips through HBM. Backward therefore *recomputes* X with one
+        forward stream (activation recomputation), then:
+            dXW = dY ⊙ 1[Y>0];  dW = Xᵀ dXW;  db = Σ dXW;
+            dH  = Aᵀ (dXW Wᵀ)   — one transposed stream.
+        """
+        from repro.kernels import fused_gcn_layer
+
+        cfg = self.config
+        h = jnp.asarray(h)
+        w = jnp.asarray(w)
+        b = jnp.asarray(b)
+        fwd = self._prepare(a, h.shape, transpose=False)
+        dtypes = (h.dtype, w.dtype, b.dtype)
+
+        def run_fused(h_in, w_in, b_in):
+            h_dev = jax.device_put(h_in)
+            y, stats = self._stream(
+                fwd,
+                lambda ell_dev, i: fused_gcn_layer(
+                    ell_dev, h_dev, w_in, b_in, interpret=cfg.interpret))
+            self.last_stream_stats = stats
+            self.forward_stats_log.append(stats)
+            return y
+
+        @jax.custom_vjp
+        def layer(h_in, w_in, b_in):
+            return run_fused(h_in, w_in, b_in)
+
+        def layer_fwd(h_in, w_in, b_in):
+            y = run_fused(h_in, w_in, b_in)
+            return y, (h_in, w_in, y)
+
+        def layer_bwd(res, dy):
+            h_in, w_in, y = res
+            # Recompute X = A H with one forward stream (counted in the
+            # backward log: it is backward-phase I/O).
+            x, stats = self._stream_spmm(fwd, h_in)
+            self.backward_stats_log.append(stats)
+            dxw = dy * (y > 0).astype(dy.dtype)
+            dw = x.T.astype(jnp.float32) @ dxw.astype(jnp.float32)
+            db = jnp.sum(dxw, axis=0)
+            dx = dxw.astype(jnp.float32) @ w_in.T.astype(jnp.float32)
+            dh = self._backward_stream(a, dx)
+            return (dh.astype(dtypes[0]), dw.astype(dtypes[1]),
+                    db.astype(dtypes[2]))
+
+        layer.defvjp(layer_fwd, layer_bwd)
+        return layer(h, w, b)
 
 
 @dataclasses.dataclass
@@ -102,6 +319,13 @@ class EpochMetrics:
     per_layer: List[ScheduleMetrics]
     epoch_makespan_s: float
     total_transfer_bytes: int
+    # execute mode: modeled backward metrics (transposed stream) per layer
+    per_layer_backward: List[ScheduleMetrics] = dataclasses.field(
+        default_factory=list)
+    # execute mode: real streaming stats, one entry per layer, layer order
+    forward_stream: List[StreamStats] = dataclasses.field(default_factory=list)
+    backward_stream: List[StreamStats] = dataclasses.field(default_factory=list)
+    wall_seconds: float = 0.0
 
     def speedup_over(self, other: "EpochMetrics") -> float:
         return other.epoch_makespan_s / max(self.epoch_makespan_s, 1e-12)
@@ -109,7 +333,7 @@ class EpochMetrics:
 
 def gcn_epoch(
     a: CSR,
-    h0: np.ndarray,
+    h0,
     weights: List[np.ndarray],
     scheduler_name: str,
     spec: TierSpec,
@@ -117,15 +341,33 @@ def gcn_epoch(
     mode: Literal["simulate", "execute"] = "simulate",
     dataset: str = "",
     backward_factor: float = 2.0,
+    engine_config: Optional[AiresConfig] = None,
 ) -> EpochMetrics:
     """One training epoch of the Fig. 1 chain under a given scheduler.
 
     Per layer: X = Ã H (out-of-core SpGEMM, scheduled), H' = σ(X W) (dense,
-    on-device). Backward is modeled as `backward_factor`× the forward cost
-    with the same streaming pattern (dÃᵀ-side SpGEMM re-streams A), matching
-    the paper's per-epoch accounting (§V-A: "one training epoch entails
-    multiple cycles of SpGEMM, activation, and backward gradient descent").
+    on-device).
+
+    simulate — backward is modeled as `backward_factor`× the forward cost
+    with the same streaming pattern, matching the paper's per-epoch
+    accounting (§V-A) at scales where execution is impractical.
+
+    execute — a true forward+backward pass runs through the differentiable
+    `AiresSpGEMM` engine (`jax.vjp` over the layer chain): the backward
+    really streams the transposed RoBW plan, and `EpochMetrics` carries the
+    per-layer forward/backward `StreamStats` plus modeled per-layer metrics
+    for the chosen scheduler over A (forward) and Aᵀ (backward).
+    `backward_factor` is ignored in execute mode.
     """
+    if mode == "execute":
+        return _execute_epoch(a, h0, weights, scheduler_name, spec,
+                              device_budget, dataset, engine_config)
+    return _simulate_epoch(a, h0, weights, scheduler_name, spec,
+                           device_budget, dataset, backward_factor)
+
+
+def _simulate_epoch(a, h0, weights, scheduler_name, spec, device_budget,
+                    dataset, backward_factor) -> EpochMetrics:
     from repro.core.memory_model import FeatureSpec
 
     sched = SCHEDULERS[scheduler_name](spec, device_budget=device_budget)
@@ -134,20 +376,78 @@ def gcn_epoch(
     total_bytes = 0
     h = h0
     for li, w in enumerate(weights):
-        res = sched.run(a, h, mode=mode, dataset=dataset)
+        res = sched.run(a, h, mode="simulate", dataset=dataset)
         m = res.metrics
         per_layer.append(m)
         if m.oom:
             return EpochMetrics(per_layer, float("inf"), 0)
-        # forward + backward streaming cycles
+        # forward + modeled backward streaming cycles
         makespan += m.makespan_s * (1.0 + backward_factor)
         total_bytes += int(m.total_transfer_bytes * (1.0 + backward_factor))
-        if mode == "execute" and res.x is not None:
-            h = np.maximum(res.x @ w, 0.0).astype(np.float32)
-        elif isinstance(h, FeatureSpec):
-            # simulate: layer output keeps the spec with the new width
+        if isinstance(h, FeatureSpec):
             h = FeatureSpec(h.n_rows, w.shape[1], h.dtype_bytes,
                             h.sparsity_pct)
         else:
             h = np.zeros((h.shape[0], w.shape[1]), dtype=np.float32)
     return EpochMetrics(per_layer, makespan, total_bytes)
+
+
+def _execute_epoch(a, h0, weights, scheduler_name, spec, device_budget,
+                   dataset, engine_config) -> EpochMetrics:
+    from repro.core.memory_model import FeatureSpec
+
+    cfg = engine_config or AiresConfig(device_budget_bytes=device_budget)
+    engine = AiresSpGEMM(cfg)
+    engine.reset_stats_logs()
+    sched = SCHEDULERS[scheduler_name](spec, device_budget=device_budget)
+    # One transpose, shared with the engine's backward streaming plans.
+    a_t = engine.transpose_of(a)
+
+    # ---- modeled per-layer accounting: forward over A, backward over Aᵀ.
+    per_layer: List[ScheduleMetrics] = []
+    per_layer_bwd: List[ScheduleMetrics] = []
+    makespan = 0.0
+    total_bytes = 0
+    n, f = h0.shape
+    width = f
+    for w in weights:
+        feat_f = FeatureSpec(n, width, 4, 0.0)
+        res_f = sched.run(a, feat_f, mode="simulate", dataset=dataset)
+        # dX arriving at this layer's aggregation has the layer's own width.
+        res_b = sched.run(a_t, FeatureSpec(n, width, 4, 0.0),
+                          mode="simulate", dataset=dataset)
+        per_layer.append(res_f.metrics)
+        per_layer_bwd.append(res_b.metrics)
+        if res_f.metrics.oom or res_b.metrics.oom:
+            return EpochMetrics(per_layer, float("inf"), 0,
+                                per_layer_backward=per_layer_bwd)
+        makespan += res_f.metrics.makespan_s + res_b.metrics.makespan_s
+        total_bytes += (res_f.metrics.total_transfer_bytes
+                        + res_b.metrics.total_transfer_bytes)
+        width = w.shape[1]
+
+    # ---- real forward+backward through the differentiable engine.
+    h0_j = jnp.asarray(np.asarray(h0, dtype=np.float32))
+    ws = [jnp.asarray(np.asarray(w, dtype=np.float32)) for w in weights]
+
+    def chain(h, ws_):
+        for w_ in ws_:
+            x = engine(a, h)
+            h = jax.nn.relu(x @ w_)
+        return h
+
+    t0 = time.perf_counter()
+    out, vjp_fn = jax.vjp(chain, h0_j, ws)
+    grads = vjp_fn(jnp.ones_like(out) / out.size)
+    jax.block_until_ready((out, grads))
+    wall = time.perf_counter() - t0
+
+    return EpochMetrics(
+        per_layer=per_layer,
+        epoch_makespan_s=makespan,
+        total_transfer_bytes=total_bytes,
+        per_layer_backward=per_layer_bwd,
+        forward_stream=list(engine.forward_stats_log),
+        backward_stream=list(reversed(engine.backward_stats_log)),
+        wall_seconds=wall,
+    )

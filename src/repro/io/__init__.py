@@ -6,9 +6,10 @@ from repro.io.tiers import (
     PAPER_GPU_SYSTEM,
     TPU_V5E_SYSTEM,
 )
-from repro.io.streamer import DoubleBufferedStreamer
+from repro.io.streamer import DoubleBufferedStreamer, StreamStats
 
 __all__ = [
     "MemoryTier", "TierSpec", "TieredMemorySystem", "TransferRecord",
     "PAPER_GPU_SYSTEM", "TPU_V5E_SYSTEM", "DoubleBufferedStreamer",
+    "StreamStats",
 ]

@@ -22,6 +22,7 @@ class StreamStats:
     put_seconds: float = 0.0       # wall time blocked on device_put dispatch
     compute_seconds: float = 0.0   # wall time blocked on result readiness
     reissues: int = 0              # straggler mitigations
+    uploaded_bytes: int = 0        # wire bytes (when payload_nbytes is given)
 
 
 class DoubleBufferedStreamer:
@@ -44,6 +45,7 @@ class DoubleBufferedStreamer:
         depth: int = 2,
         deadline_s: Optional[float] = None,
         max_reissue: int = 1,
+        payload_nbytes: Optional[Callable[[Any], int]] = None,
     ):
         if depth < 1:
             raise ValueError("depth must be >= 1")
@@ -52,17 +54,23 @@ class DoubleBufferedStreamer:
         self.depth = depth
         self.deadline_s = deadline_s
         self.max_reissue = max_reissue
+        self.payload_nbytes = payload_nbytes
         self.stats = StreamStats()
 
     def _upload_with_deadline(self, payload: Any) -> Any:
+        nbytes = (int(self.payload_nbytes(payload))
+                  if self.payload_nbytes is not None else 0)
+        self.stats.uploaded_bytes += nbytes
         t0 = time.perf_counter()
         dev = self.upload(payload)
         if self.deadline_s is not None:
             for _ in range(self.max_reissue):
                 if time.perf_counter() - t0 <= self.deadline_s:
                     break
-                # Straggler: re-issue the transfer (idempotent device_put).
+                # Straggler: re-issue the transfer (idempotent device_put);
+                # the retransmit is real wire traffic, so count it.
                 self.stats.reissues += 1
+                self.stats.uploaded_bytes += nbytes
                 t0 = time.perf_counter()
                 dev = self.upload(payload)
         self.stats.put_seconds += time.perf_counter() - t0

@@ -18,7 +18,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
 
 
 def _spmm_kernel(n_tiles_ref, col_tile_ref, a_ref, h_ref, o_ref):
@@ -65,7 +66,7 @@ def bcsr_spmm_pallas(
 
     out = pl.pallas_call(
         _spmm_kernel,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
+        grid_spec=compat.prefetch_scalar_grid_spec(
             num_scalar_prefetch=2,
             grid=grid,
             in_specs=[
@@ -81,7 +82,7 @@ def bcsr_spmm_pallas(
             ),
         ),
         out_shape=jax.ShapeDtypeStruct((n_rb * bm, f_pad), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -143,7 +144,7 @@ def fused_gcn_layer_pallas(
 
     out = pl.pallas_call(
         _fused_gcn_kernel,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
+        grid_spec=compat.prefetch_scalar_grid_spec(
             num_scalar_prefetch=2,
             grid=grid,
             in_specs=[
@@ -165,10 +166,10 @@ def fused_gcn_layer_pallas(
                 (bm, f_out),
                 lambda rb, s, n_tiles_ref, col_tile_ref: (rb, 0),
             ),
-            scratch_shapes=[pltpu.VMEM((bm, f), jnp.float32)],
+            scratch_shapes=[compat.VMEM((bm, f), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((n_rb * bm, f_out), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

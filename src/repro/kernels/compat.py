@@ -1,0 +1,105 @@
+"""JAX / Pallas API-drift shim.
+
+The kernels target both JAX 0.4.x (the container's 0.4.37) and current
+releases, whose Pallas TPU surface renamed several entry points:
+
+  =====================  ==========================  =======================
+  concept                JAX 0.4.x name              current name
+  =====================  ==========================  =======================
+  Mosaic compile params  pltpu.TPUCompilerParams     pltpu.CompilerParams
+  scalar-prefetch grid   pltpu.PrefetchScalarGridSpec (unchanged, re-exported)
+  named-axis size        lax.psum(1, name)           lax.axis_size(name)
+  mesh context           `with mesh:`                jax.sharding.use_mesh /
+                                                     set_mesh
+  AbstractMesh ctor      AbstractMesh(((n, s), ...)) AbstractMesh(sizes, names)
+  =====================  ==========================  =======================
+
+Every kernel imports from here instead of touching `pltpu` attributes
+directly, so a JAX upgrade is a one-file audit.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Sequence
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = [
+    "compiler_params",
+    "prefetch_scalar_grid_spec",
+    "axis_size",
+    "use_mesh",
+    "make_abstract_mesh",
+    "VMEM",
+]
+
+# Dense scratch allocations have kept their name; re-export for symmetry so
+# kernels can import everything version-sensitive from one module.
+VMEM = pltpu.VMEM
+
+_COMPILER_PARAMS_CLS = getattr(
+    pltpu, "CompilerParams", None) or getattr(pltpu, "TPUCompilerParams")
+
+_PREFETCH_GRID_CLS = getattr(pltpu, "PrefetchScalarGridSpec")
+
+
+def compiler_params(*, dimension_semantics: Sequence[str], **kwargs: Any):
+    """Mosaic compiler params under whichever class this JAX exposes."""
+    return _COMPILER_PARAMS_CLS(
+        dimension_semantics=tuple(dimension_semantics), **kwargs)
+
+
+def prefetch_scalar_grid_spec(*, num_scalar_prefetch: int, grid, in_specs,
+                              out_specs, scratch_shapes=()):
+    """Scalar-prefetch grid spec (stable name today, shimmed for the next
+    rename — grid-spec construction funnels through this one call site)."""
+    return _PREFETCH_GRID_CLS(
+        num_scalar_prefetch=num_scalar_prefetch,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=list(scratch_shapes),
+    )
+
+
+def axis_size(axis_name: str) -> int:
+    """Static size of a named mesh axis from inside shard_map/pmap.
+
+    `lax.axis_size` first appeared after 0.4.x; `lax.psum(1, name)`
+    constant-folds to a Python int on every version.
+    """
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def use_mesh(mesh):
+    """Context manager activating `mesh` for jit/GSPMD sharding resolution.
+
+    Current JAX: jax.sharding.use_mesh (or its earlier spelling set_mesh).
+    JAX 0.4.x: concrete Mesh objects are themselves context managers;
+    AbstractMesh is not and needs no activation there.
+    """
+    for name in ("use_mesh", "set_mesh"):
+        fn = getattr(jax.sharding, name, None)
+        if fn is not None:
+            return fn(mesh)
+    if hasattr(mesh, "__enter__"):
+        return mesh
+    return contextlib.nullcontext(mesh)
+
+
+def make_abstract_mesh(axis_sizes: Sequence[int], axis_names: Sequence[str]):
+    """AbstractMesh across the ctor signature change.
+
+    Current: AbstractMesh(axis_sizes, axis_names).
+    0.4.x:   AbstractMesh(shape_tuple) with (name, size) pairs.
+    """
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))

@@ -16,7 +16,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
 
 
 def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref,
@@ -82,7 +83,7 @@ def decode_attention_pallas(
     kernel = functools.partial(_decode_kernel, bs=block_s, scale=scale)
     out = pl.pallas_call(
         kernel,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
+        grid_spec=compat.prefetch_scalar_grid_spec(
             num_scalar_prefetch=1,
             grid=(b_sz, n_kv, n_s),
             in_specs=[
@@ -96,13 +97,13 @@ def decode_attention_pallas(
             out_specs=pl.BlockSpec((1, 1, group, d),
                                    lambda b, h, s, lens_ref: (b, h, 0, 0)),
             scratch_shapes=[
-                pltpu.VMEM((group, 1), jnp.float32),
-                pltpu.VMEM((group, 1), jnp.float32),
-                pltpu.VMEM((group, d), jnp.float32),
+                compat.VMEM((group, 1), jnp.float32),
+                compat.VMEM((group, 1), jnp.float32),
+                compat.VMEM((group, d), jnp.float32),
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((b_sz, n_kv, group, d), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

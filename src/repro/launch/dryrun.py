@@ -35,6 +35,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import SHAPES, arch_ids, get_config, shape_applicable
 from repro.launch.hlo_analysis import collective_bytes, collective_count
+from repro.kernels.compat import use_mesh
 from repro.launch.mesh import make_production_mesh
 from repro.launch.sharding import (
     batch_pspec, opt_state_pspecs, state_pspecs, tree_pspecs,
@@ -177,7 +178,7 @@ def _body_cost(cfg, mesh, mesh_axes, shape, kind: str, abs_params,
                  *[_tree_sh(mesh, sp) for sp in unit_specs],
                  *[_tree_sh(mesh, sp) for sp in state_specs])
 
-    with jax.sharding.set_mesh(mesh):
+    with use_mesh(mesh):
         lowered = jax.jit(body, in_shardings=in_sh).lower(*args)
         compiled = lowered.compile()
     return _analyze(lowered, compiled)
@@ -324,7 +325,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         args = tuple(args)
 
     try:
-        with jax.sharding.set_mesh(mesh):
+        with use_mesh(mesh):
             t_l = time.time()
             lowered = step.lower(*args)
             result["lower_s"] = round(time.time() - t_l, 2)

@@ -14,6 +14,7 @@ from repro.sparse.formats import (
     csr_to_dense,
     csc_to_dense,
     csr_to_csc,
+    csr_transpose,
     csr_row_slice,
 )
 from repro.sparse.blocking import (
@@ -30,7 +31,7 @@ from repro.sparse.ref_spgemm import (
 __all__ = [
     "CSR", "CSC", "COO", "BlockELL",
     "csr_from_dense", "csc_from_dense", "csr_to_dense", "csc_to_dense",
-    "csr_to_csc", "csr_row_slice",
+    "csr_to_csc", "csr_transpose", "csr_row_slice",
     "tile_csr_to_block_ell", "block_ell_to_dense", "round_up",
     "spgemm_csr_dense", "spgemm_csr_csc", "spmm_dense_ref",
 ]

@@ -158,24 +158,29 @@ def csc_to_dense(b: CSC) -> np.ndarray:
     return out
 
 
+def csr_transpose(a: CSR) -> CSR:
+    """CSR of Aᵀ — the backward-pass adjacency (dH = Aᵀ dX).
+
+    Vectorized counting sort by column: a stable argsort of the column ids
+    groups each output row's entries in source-row order, so the result is
+    canonical CSR (column ids strictly grouped, rows sorted). O(nnz log nnz)
+    host work, no Python-per-nnz loop — this runs once per training graph in
+    the backward planning path.
+    """
+    counts = np.bincount(a.indices, minlength=a.n_cols)
+    indptr = np.zeros(a.n_cols + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    order = np.argsort(a.indices, kind="stable")
+    row_of = np.repeat(
+        np.arange(a.n_rows, dtype=np.int64), np.diff(a.indptr))
+    return CSR(indptr=indptr, indices=row_of[order],
+               data=a.data[order], shape=(a.n_cols, a.n_rows))
+
+
 def csr_to_csc(a: CSR) -> CSC:
-    """Transpose-free CSR→CSC re-index (counting sort by column)."""
-    n_rows, n_cols = a.shape
-    counts = np.zeros(n_cols + 1, dtype=np.int64)
-    np.add.at(counts, a.indices + 1, 1)
-    indptr = np.cumsum(counts)
-    indices = np.empty(a.nnz, dtype=np.int64)
-    data = np.empty(a.nnz, dtype=a.data.dtype)
-    cursor = indptr[:-1].copy()
-    for i in range(n_rows):
-        lo, hi = a.indptr[i], a.indptr[i + 1]
-        for k in range(lo, hi):
-            j = a.indices[k]
-            dst = cursor[j]
-            indices[dst] = i
-            data[dst] = a.data[k]
-            cursor[j] += 1
-    return CSC(indptr=indptr, indices=indices, data=data, shape=a.shape)
+    """CSR→CSC re-index. CSC of A stores exactly the arrays of CSR of Aᵀ."""
+    t = csr_transpose(a)
+    return CSC(indptr=t.indptr, indices=t.indices, data=t.data, shape=a.shape)
 
 
 def csr_row_slice(a: CSR, start: int, stop: int) -> CSR:

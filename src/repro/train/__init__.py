@@ -3,11 +3,15 @@ from repro.train.optim import (
     OPTIMIZERS, make_optimizer,
 )
 from repro.train.compression import compress_grads, decompress_grads, ef_init
-from repro.train.loop import TrainLoopConfig, make_train_step, train_loop
+from repro.train.loop import (
+    TrainLoopConfig, gcn_train_loop, make_gcn_train_step, make_train_step,
+    train_loop,
+)
 
 __all__ = [
     "adamw_init", "adamw_update", "adafactor_init", "adafactor_update",
     "OPTIMIZERS", "make_optimizer",
     "compress_grads", "decompress_grads", "ef_init",
     "TrainLoopConfig", "make_train_step", "train_loop",
+    "make_gcn_train_step", "gcn_train_loop",
 ]

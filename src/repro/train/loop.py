@@ -8,6 +8,10 @@ pair still bounds the wire format of the reduce).
 
 `train_loop` drives steps with checkpoint/restart via repro.checkpoint and
 the runtime supervisor's retry policy.
+
+`make_gcn_train_step` / `gcn_train_loop` are the out-of-core counterparts
+for the paper's GCN workload: gradients flow through `AiresSpGEMM`'s custom
+VJP, so every optimizer step really streams A forward and Aᵀ backward.
 """
 from __future__ import annotations
 
@@ -78,6 +82,61 @@ def make_train_step(cfg: ArchConfig, loop_cfg: TrainLoopConfig,
         return loss, params, opt_state, new_ef
 
     return train_step
+
+
+def make_gcn_train_step(cfg, engine, a, h0, labels,
+                        optimizer: str = "adamw", lr: float = 1e-2,
+                        **opt_kwargs):
+    """Out-of-core GCN train step (the paper's actual workload).
+
+    cfg is a `repro.models.gcn.GCNConfig` with out_of_core=True, `engine` an
+    `AiresSpGEMM`, `a` host CSR. The returned step is NOT wrapped in jit:
+    the streaming pipeline runs host-side (device_put + per-segment Pallas
+    dispatch), and jit would freeze its per-epoch accounting. Returns
+    (init_opt, step) with step(params, opt_state) -> (loss, params,
+    opt_state).
+    """
+    from repro.models.gcn import gcn_loss
+    from repro.train.optim import make_optimizer as _mk
+
+    init_opt, opt_update = _mk(optimizer, lr=lr, **opt_kwargs)
+
+    def step(params, opt_state):
+        loss, grads = jax.value_and_grad(
+            lambda p: gcn_loss(cfg, p, a, h0, labels, engine=engine))(params)
+        params, opt_state = opt_update(params, grads, opt_state)
+        return loss, params, opt_state
+
+    return init_opt, step
+
+
+def gcn_train_loop(cfg, engine, a, h0, labels, params, n_epochs: int,
+                   optimizer: str = "adamw", lr: float = 1e-2,
+                   log_every: int = 1):
+    """Drive true out-of-core GCN epochs; returns (params, info).
+
+    info carries the loss history and the per-epoch forward/backward
+    `StreamStats` logs from the engine — the real counterpart of
+    `gcn_epoch(mode="execute")` accounting, here under an actual optimizer.
+    """
+    init_opt, step = make_gcn_train_step(cfg, engine, a, h0, labels,
+                                         optimizer=optimizer, lr=lr)
+    opt_state = init_opt(params)
+    history = []
+    epochs = []
+    t0 = time.perf_counter()
+    for epoch in range(n_epochs):
+        engine.reset_stats_logs()
+        loss, params, opt_state = step(params, opt_state)
+        epochs.append({
+            "forward_stream": list(engine.forward_stats_log),
+            "backward_stream": list(reversed(engine.backward_stats_log)),
+        })
+        if epoch % log_every == 0:
+            history.append((epoch, float(loss)))
+    jax.block_until_ready(loss)
+    return params, {"history": history, "epochs": epochs,
+                    "seconds": time.perf_counter() - t0}
 
 
 def train_loop(cfg: ArchConfig, loop_cfg: TrainLoopConfig, params, opt_state,

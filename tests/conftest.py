@@ -1,0 +1,53 @@
+"""Shared fixtures + markers for the AIRES test suite.
+
+Tier split (see README "Testing"):
+  * fast tier — `pytest -m "not slow"`: runs on every PR.
+  * full tier — `pytest`: runs on main; adds the long streaming/training sweeps.
+
+The `slow` marker is registered here (and in pyproject.toml) so the fast
+subset never warns on unknown markers.
+"""
+import numpy as np
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running test (excluded from the PR-tier fast subset)")
+
+
+@pytest.fixture(scope="session")
+def make_sparse():
+    """Factory for small random sparse matrices: (CSR, dense) pairs.
+
+    Deterministic per (n, m, density, seed) so session-scoped reuse is safe.
+    """
+    from repro.sparse import csr_from_dense
+
+    def _make(n, m, density=0.2, seed=0, dtype=np.float32):
+        rng = np.random.default_rng(seed)
+        dense = ((rng.random((n, m)) < density)
+                 * rng.standard_normal((n, m))).astype(dtype)
+        return csr_from_dense(dense), dense
+
+    return _make
+
+
+@pytest.fixture(scope="session")
+def paper_graph():
+    """A scaled paper dataset adjacency (normalized), shared across modules."""
+    from repro.data import (
+        SUITESPARSE_SPECS, generate_graph, normalized_adjacency, scaled_spec,
+    )
+
+    spec = scaled_spec(SUITESPARSE_SPECS["kV2a"], 2e-4)
+    a = normalized_adjacency(generate_graph(spec, seed=3))
+    a.validate()
+    return a
+
+
+@pytest.fixture(scope="session")
+def paper_feats(paper_graph):
+    rng = np.random.default_rng(0)
+    return rng.standard_normal((paper_graph.n_rows, 16)).astype(np.float32)

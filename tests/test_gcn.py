@@ -2,6 +2,7 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.configs.gcn_paper import SMOKE
 from repro.core import AiresConfig, AiresSpGEMM
@@ -35,6 +36,7 @@ def test_out_of_core_matches_in_core():
                                atol=1e-3, rtol=1e-3)
 
 
+@pytest.mark.slow
 def test_gcn_training_converges():
     a, h0, labels = _setup()
     params = gcn_init(SMOKE, jax.random.PRNGKey(0))

@@ -3,13 +3,23 @@
 Needs >1 device, so it runs in a subprocess with
 --xla_force_host_platform_device_count=8 (the main test process locked
 jax to 1 CPU device at import).
+
+Triage note (2026-07): this test's "numeric assertion failure" was API
+drift, not a routing bug — the subprocess crashed with AttributeError
+(`jax.sharding.set_mesh` / `jax.lax.axis_size` are absent on JAX 0.4.x)
+before computing anything, and the returncode assertion surfaced it as a
+failure. With the compat shims the shard_map path matches the GSPMD
+reference to <1e-4 unchanged.
 """
 import os
 import subprocess
 import sys
 import textwrap
 
+import pytest
 
+
+@pytest.mark.slow
 def test_shard_map_moe_matches_reference():
     script = textwrap.dedent("""
         import os
@@ -21,13 +31,15 @@ def test_shard_map_moe_matches_reference():
         from repro.models.layers import moe_ffn
         from repro.models.transformer import _init_moe
 
+        from repro.kernels.compat import use_mesh
+
         cfg = get_config("kimi_k2_1t_a32b", smoke=True)
         cfg = dataclasses.replace(cfg, n_experts=8, top_k=2,
                                   capacity_factor=8.0)
         mesh = jax.make_mesh((2, 4), ("data", "model"))
         p = _init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
         x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, cfg.d_model))
-        with jax.sharding.set_mesh(mesh):
+        with use_mesh(mesh):
             out_sm, _ = jax.jit(lambda p_, x_: moe_ffn_shard_map(
                 cfg, p_, x_, mesh, ("data",), "model"))(p, x)
         out_ref, _ = moe_ffn(cfg, p, x)

@@ -1,29 +1,50 @@
-"""Property-based tests (hypothesis) for the RoBW invariants — the
-algorithmic heart of the paper (Alg. 1)."""
+"""Property-based tests for the RoBW invariants — the algorithmic heart of
+the paper (Alg. 1) plus the transposed backward plan (dH = Aᵀ dX).
+
+Runs under `hypothesis` when installed (declared in requirements-test.txt);
+without it, each property falls back to a deterministic seeded sweep over
+the same case distribution, so the invariants stay covered in minimal
+environments instead of silently skipping.
+"""
+import importlib.util
+
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import robw_partition, naive_partition, calc_mem
+from repro.core import robw_partition, robw_transpose_plan, naive_partition
 from repro.core.robw import segments_to_block_ell
-from repro.sparse import csr_from_dense, csr_row_slice, block_ell_to_dense
+from repro.sparse import (
+    block_ell_to_dense, csr_from_dense, csr_row_slice, csr_to_dense,
+    csr_transpose,
+)
+
+HAVE_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
 
 
-@st.composite
-def sparse_matrices(draw):
-    n = draw(st.integers(8, 64))
-    m = draw(st.integers(8, 64))
-    density = draw(st.floats(0.01, 0.4))
-    seed = draw(st.integers(0, 2**31 - 1))
-    rng = np.random.default_rng(seed)
-    dense = (rng.random((n, m)) < density) * rng.standard_normal((n, m))
-    return csr_from_dense(dense.astype(np.float32)), dense.astype(np.float32)
+def _random_sparse(rng):
+    """One case from the shared distribution (mirrors the hypothesis
+    strategy below so both drivers exercise identical shapes)."""
+    n = int(rng.integers(8, 65))
+    m = int(rng.integers(8, 65))
+    density = float(rng.uniform(0.01, 0.4))
+    dense = ((rng.random((n, m)) < density)
+             * rng.standard_normal((n, m))).astype(np.float32)
+    return csr_from_dense(dense), dense
 
 
-@settings(max_examples=30, deadline=None)
-@given(sparse_matrices(), st.integers(64, 4096))
-def test_robw_invariants(am, budget):
-    a, dense = am
+def _fallback_cases(n_cases):
+    """Deterministic generator: seed i → (matrix, budget, align) tuple."""
+    for seed in range(n_cases):
+        rng = np.random.default_rng(seed)
+        a, dense = _random_sparse(rng)
+        budget = int(rng.integers(64, 4097))
+        align = int(rng.integers(2, 17))
+        yield a, dense, budget, align
+
+
+# ---- the properties (plain functions — both drivers call these) ----------
+
+def check_robw_invariants(a, dense, budget):
     plan = robw_partition(a, budget)
     segs = plan.segments
     # 1. Complete cover, in order, no overlap (no row ever split).
@@ -39,41 +60,34 @@ def test_robw_invariants(am, budget):
     rebuilt_nnz = sum(p.nnz for p in parts)
     assert rebuilt_nnz == a.nnz
     rebuilt = np.concatenate([
-        np.concatenate([p.data[p.indptr[i]:p.indptr[i+1]]
-                        for i in range(p.n_rows)]) if p.nnz else np.empty(0, np.float32)
+        np.concatenate([p.data[p.indptr[i]:p.indptr[i + 1]]
+                        for i in range(p.n_rows)]) if p.nnz
+        else np.empty(0, np.float32)
         for p in parts]) if a.nnz else np.empty(0, np.float32)
     np.testing.assert_array_equal(rebuilt, a.data)
 
 
-@settings(max_examples=30, deadline=None)
-@given(sparse_matrices(), st.integers(2, 16), st.integers(64, 4096))
-def test_robw_alignment(am, align, budget):
-    a, _ = am
+def check_robw_alignment(a, align, budget):
     plan = robw_partition(a, budget, align=align)
     for seg in plan.segments[:-1]:
         # aligned unless the budget forced a sub-align block
-        assert seg.n_rows % align == 0 or seg.nbytes >= budget // 2 or seg.n_rows == 1
+        assert (seg.n_rows % align == 0 or seg.nbytes >= budget // 2
+                or seg.n_rows == 1)
 
 
-@settings(max_examples=20, deadline=None)
-@given(sparse_matrices(), st.integers(128, 2048))
-def test_naive_partition_covers_and_flags(am, budget):
-    a, _ = am
+def check_naive_partition_covers_and_flags(a, budget):
     cuts = naive_partition(a, budget)
     assert cuts[0][0] == 0 and cuts[-1][1] == a.nnz
     for (lo, hi, *_), (lo2, *_rest) in zip(cuts, cuts[1:]):
         assert hi == lo2
     # any interior cut not on a row boundary must be flagged partial
     boundaries = set(a.indptr.tolist())
-    for i, (lo, hi, first_partial, last_partial) in enumerate(cuts[:-1]):
+    for lo, hi, first_partial, last_partial in cuts[:-1]:
         if hi not in boundaries:
             assert last_partial
 
 
-@settings(max_examples=15, deadline=None)
-@given(sparse_matrices())
-def test_block_ell_roundtrip(am):
-    a, dense = am
+def check_block_ell_roundtrip(a, dense):
     plan = robw_partition(a, max(256, a.nbytes() // 3), align=8)
     rows = 0
     out = np.zeros_like(dense)
@@ -84,3 +98,115 @@ def test_block_ell_roundtrip(am):
         rows += seg.n_rows
     assert rows == a.n_rows
     np.testing.assert_allclose(out, dense, atol=1e-6)
+
+
+def check_transpose_involution(a):
+    """Transpose of transpose reproduces A exactly (canonical CSR arrays)."""
+    att = csr_transpose(csr_transpose(a))
+    assert att.shape == a.shape
+    np.testing.assert_array_equal(att.indptr, a.indptr)
+    np.testing.assert_array_equal(att.indices, a.indices)
+    np.testing.assert_array_equal(att.data, a.data)
+
+
+def check_transpose_plan_covers_nnz_once(a, dense, budget):
+    """The backward plan's densified segments cover every nnz of Aᵀ exactly
+    once: reassembling them reproduces denseᵀ, and segment nnz sums to
+    nnz(A) — the invariant that makes the streamed dH = Aᵀ dX exact."""
+    a_t, plan = robw_transpose_plan(a, max(256, budget), align=8)
+    assert a_t.shape == (a.shape[1], a.shape[0])
+    assert a_t.nnz == a.nnz
+    assert sum(s.nnz for s in plan.segments) == a.nnz
+    out = np.zeros((a.shape[1], a.shape[0]), dtype=np.float32)
+    for seg, ell in zip(plan.segments,
+                        segments_to_block_ell(a_t, plan, bm=8, bk=8)):
+        out[seg.row_start:seg.row_end] = block_ell_to_dense(ell)[: seg.n_rows]
+    np.testing.assert_allclose(out, dense.T, atol=1e-6)
+    # ... and the transposed stream against ones recovers column sums of A:
+    # every A-nonzero contributes to exactly one backward segment product.
+    col_sums = out @ np.ones((a.shape[0],), np.float32)
+    np.testing.assert_allclose(col_sums, csr_to_dense(a).T.sum(axis=1),
+                               atol=1e-5)
+
+
+# ---- hypothesis driver ---------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
+
+    @st.composite
+    def sparse_matrices(draw):
+        n = draw(st.integers(8, 64))
+        m = draw(st.integers(8, 64))
+        density = draw(st.floats(0.01, 0.4))
+        seed = draw(st.integers(0, 2**31 - 1))
+        rng = np.random.default_rng(seed)
+        dense = ((rng.random((n, m)) < density)
+                 * rng.standard_normal((n, m))).astype(np.float32)
+        return csr_from_dense(dense), dense
+
+    @settings(max_examples=30, deadline=None)
+    @given(sparse_matrices(), st.integers(64, 4096))
+    def test_robw_invariants(am, budget):
+        check_robw_invariants(*am, budget)
+
+    @settings(max_examples=30, deadline=None)
+    @given(sparse_matrices(), st.integers(2, 16), st.integers(64, 4096))
+    def test_robw_alignment(am, align, budget):
+        check_robw_alignment(am[0], align, budget)
+
+    @settings(max_examples=20, deadline=None)
+    @given(sparse_matrices(), st.integers(128, 2048))
+    def test_naive_partition_covers_and_flags(am, budget):
+        check_naive_partition_covers_and_flags(am[0], budget)
+
+    @settings(max_examples=15, deadline=None)
+    @given(sparse_matrices())
+    def test_block_ell_roundtrip(am):
+        check_block_ell_roundtrip(*am)
+
+    @settings(max_examples=25, deadline=None)
+    @given(sparse_matrices())
+    def test_transpose_involution(am):
+        check_transpose_involution(am[0])
+
+    @settings(max_examples=15, deadline=None)
+    @given(sparse_matrices(), st.integers(256, 4096))
+    def test_transpose_plan_covers_nnz_once(am, budget):
+        check_transpose_plan_covers_nnz_once(*am, budget)
+
+
+# ---- deterministic fallback driver (no hypothesis installed) -------------
+
+else:
+    CASES = list(_fallback_cases(15))
+
+    @pytest.mark.parametrize("case", range(len(CASES)))
+    def test_robw_invariants(case):
+        a, dense, budget, _ = CASES[case]
+        check_robw_invariants(a, dense, budget)
+
+    @pytest.mark.parametrize("case", range(len(CASES)))
+    def test_robw_alignment(case):
+        a, _, budget, align = CASES[case]
+        check_robw_alignment(a, align, budget)
+
+    @pytest.mark.parametrize("case", range(0, len(CASES), 2))
+    def test_naive_partition_covers_and_flags(case):
+        a, _, budget, _ = CASES[case]
+        check_naive_partition_covers_and_flags(a, max(128, budget // 2))
+
+    @pytest.mark.parametrize("case", range(0, len(CASES), 2))
+    def test_block_ell_roundtrip(case):
+        a, dense, _, _ = CASES[case]
+        check_block_ell_roundtrip(a, dense)
+
+    @pytest.mark.parametrize("case", range(len(CASES)))
+    def test_transpose_involution(case):
+        a, _, _, _ = CASES[case]
+        check_transpose_involution(a)
+
+    @pytest.mark.parametrize("case", range(0, len(CASES), 2))
+    def test_transpose_plan_covers_nnz_once(case):
+        a, dense, budget, _ = CASES[case]
+        check_transpose_plan_covers_nnz_once(a, dense, budget)

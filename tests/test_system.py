@@ -14,23 +14,19 @@ from repro.core import (
     SCHEDULERS, FeatureSpec, required_bytes, AiresSpGEMM, AiresConfig,
     plan_memory_spec,
 )
-from repro.data import SUITESPARSE_SPECS, generate_graph, normalized_adjacency, scaled_spec
 from repro.io.tiers import PAPER_GPU_SYSTEM
 from repro.sparse.ref_spgemm import spgemm_csr_dense
 
 
 @pytest.fixture(scope="module")
-def graph():
-    spec = scaled_spec(SUITESPARSE_SPECS["kV2a"], 2e-4)
-    a = normalized_adjacency(generate_graph(spec, seed=3))
-    a.validate()
-    return a
+def graph(paper_graph):
+    # shared session graph from conftest (same spec as the paper artifacts)
+    return paper_graph
 
 
 @pytest.fixture(scope="module")
-def feats(graph):
-    rng = np.random.default_rng(0)
-    return rng.standard_normal((graph.n_rows, 16)).astype(np.float32)
+def feats(paper_feats):
+    return paper_feats
 
 
 def _streaming_budget(graph, feats, a_frac=0.6):
@@ -117,6 +113,7 @@ def test_fig7_byte_reduction(graph):
     assert reduction > 0.5, f"expected large DMA+UM reduction, got {reduction:.2f}"
 
 
+@pytest.mark.slow
 def test_streaming_engine_matches_oracle(graph, feats):
     import jax.numpy as jnp
     budget = _streaming_budget(graph, feats)
