@@ -43,6 +43,7 @@ from repro.core.robw import (
     robw_partition,
     segments_to_block_ell,
 )
+from repro.io.segment_cache import SegmentKey, TieredSegmentCache
 from repro.io.tiers import (
     MemoryTier,
     OutOfMemory,
@@ -69,6 +70,7 @@ class ScheduleMetrics:
     bytes_by_path: Dict[str, int] = dataclasses.field(default_factory=dict)
     seconds_by_path: Dict[str, float] = dataclasses.field(default_factory=dict)
     total_transfer_bytes: int = 0
+    cache_hit_bytes: int = 0         # wire bytes served by the segment cache
     merge_events: int = 0
     merge_io_s: float = 0.0          # modeled DtoH/HtoD seconds for merges
     segments: int = 0
@@ -172,7 +174,8 @@ class AiresScheduler(_BaseScheduler):
     name = "aires"
 
     def __init__(self, *args, bm: int = 128, bk: int = 128, align: int = 8,
-                 wire_format: Literal["csr", "bricks"] = "csr", **kw):
+                 wire_format: Literal["csr", "bricks"] = "csr",
+                 segment_cache: Optional[TieredSegmentCache] = None, **kw):
         super().__init__(*args, **kw)
         self.bm = bm
         self.bk = bk
@@ -181,6 +184,11 @@ class AiresScheduler(_BaseScheduler):
         #        densification happens device-side on GPU); "bricks": stream
         #        densified BlockELL bricks (TPU wire format).
         self.wire_format = wire_format
+        # Optional TieredSegmentCache shared across runs: cache-hit segments
+        # skip the Phase II DMA transfer (device-tier hit) or pay only the
+        # promotion (host-tier hit), both visible in bytes_by_path; skipped
+        # wire bytes are reported in metrics.cache_hit_bytes.
+        self.segment_cache = segment_cache
 
     def run(self, a: CSR, h, mode="simulate", dataset="") -> ScheduleResult:
         tms = TieredMemorySystem(self.spec)
@@ -225,14 +233,37 @@ class AiresScheduler(_BaseScheduler):
                     if mode == "execute" or self.wire_format == "bricks" else None)
         ells = list(ell_iter) if ell_iter is not None else [None] * plan.n_segments
 
-        for seg, ell in zip(plan.segments, ells):
+        cache = self.segment_cache
+        # "sim:" prefix keeps simulate-mode token entries from ever aliasing
+        # an execute-mode device payload in a shared cache.
+        graph_ns = (f"sim:g{id(a)}:{a.nnz}:{a.shape[0]}x{a.shape[1]}"
+                    f":w{f}:b{self.device_budget}")
+        for i, (seg, ell) in enumerate(zip(plan.segments, ells)):
             if self.wire_format == "bricks" and ell is not None:
                 wire_bytes = ell.nbytes()
+                wire_shape = tuple(ell.blocks.shape)
             else:
                 wire_bytes = seg.nbytes
-            seg_io.append(
-                tms.transfer(Path.DMA, MemoryTier.HOST, MemoryTier.DEVICE,
-                             wire_bytes, tag="phaseII/seg"))
+                wire_shape = (seg.n_rows, seg.nnz)
+            if cache is not None:
+                key = SegmentKey(graph_ns, i, self.wire_format, wire_shape)
+                hit, promote_s = cache.get_with_cost(
+                    key, nbytes=wire_bytes, tms=tms)
+                if hit is not None:
+                    m.cache_hit_bytes += wire_bytes
+                    # Device-tier hit: free. Host-tier hit: the promotion DMA
+                    # (already in tms) is this segment's pipeline I/O slot.
+                    seg_io.append(promote_s)
+                else:
+                    seg_io.append(tms.transfer(
+                        Path.DMA, MemoryTier.HOST, MemoryTier.DEVICE,
+                        wire_bytes, tag="phaseII/seg"))
+                    cache.put(key, ell if ell is not None else True,
+                              wire_bytes, tms=tms, pin=a)
+            else:
+                seg_io.append(tms.transfer(
+                    Path.DMA, MemoryTier.HOST, MemoryTier.DEVICE,
+                    wire_bytes, tag="phaseII/seg"))
             seg_cmp.append(self._spgemm_seconds(seg.nnz, feat))
             if mode == "execute" and ell is not None:
                 from repro.kernels import bcsr_spmm as _spmm_op

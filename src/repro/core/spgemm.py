@@ -35,6 +35,7 @@ from repro.core.scheduler import (
     ScheduleResult,
     SCHEDULERS,
 )
+from repro.io.segment_cache import SegmentKey, TieredSegmentCache
 from repro.io.streamer import DoubleBufferedStreamer, StreamStats
 from repro.io.tiers import TierSpec, TPU_V5E_SYSTEM
 from repro.sparse.formats import CSR
@@ -50,6 +51,12 @@ class AiresConfig:
     straggler_deadline_s: Optional[float] = None
     wire_format: Literal["csr", "bricks"] = "bricks"
     interpret: Optional[bool] = None  # None → auto (CPU container)
+    # Plan (and densify) as if the feature matrix were this wide, regardless
+    # of the H actually passed — one RoBW plan then serves every layer width
+    # and every batched request width ≤ plan_features, so the segment cache
+    # hits across layers/epochs/requests instead of re-planning per shape.
+    # Widths beyond plan_features still get their own (conservative) plan.
+    plan_features: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -61,6 +68,7 @@ class _Prepared:
     plan: object              # RoBWPlan
     segs: List[object]
     ells: List[object]
+    cache_ns: str = ""        # segment-cache namespace (graph+direction+plan)
 
 
 class AiresSpGEMM:
@@ -86,8 +94,13 @@ class AiresSpGEMM:
     # evicts instead of growing without bound.
     PREPARED_CACHE_MAX = 8
 
-    def __init__(self, config: AiresConfig):
+    def __init__(self, config: AiresConfig,
+                 segment_cache: Optional[TieredSegmentCache] = None):
         self.config = config
+        # Optional tiered LRU over uploaded BlockELL payloads (shared across
+        # engines by the serving layer): repeat streams of the same plan skip
+        # the device_put entirely — see StreamStats.cache_hit_bytes.
+        self.segment_cache = segment_cache
         self._prepared: Dict[tuple, _Prepared] = {}
         self._transposes: Dict[tuple, Tuple[CSR, CSR]] = {}
         self.forward_stats_log: List[StreamStats] = []
@@ -111,9 +124,19 @@ class AiresSpGEMM:
         self.backward_stats_log = []
 
     def clear_cache(self) -> None:
-        """Drop all cached plans/densified tiles (and memoized transposes)."""
+        """Drop all cached plans/densified tiles (and memoized transposes).
+
+        Does NOT touch the shared segment cache — use
+        `segment_cache.invalidate_prefix(graph_cache_prefix(a))` for that.
+        """
         self._prepared.clear()
         self._transposes.clear()
+
+    @staticmethod
+    def graph_cache_prefix(a: CSR) -> str:
+        """Identity prefix shared by every segment-cache namespace this
+        engine derives for `a` (any direction, plan width, or budget)."""
+        return f"g{id(a)}:{a.nnz}:{a.shape[0]}x{a.shape[1]}"
 
     # ---- host-side preparation (cached per graph × feature shape) --------
     #
@@ -144,19 +167,24 @@ class AiresSpGEMM:
     def _prepare(self, a: CSR, dense_shape, transpose: bool) -> _Prepared:
         """Plan + densify one streaming direction; LRU-cached for epoch
         reuse (see the immutability note above)."""
-        key = (id(a), a.nnz, a.shape, tuple(dense_shape), transpose)
+        cfg = self.config
+        # Plan at the pinned width when configured (conservative for any
+        # narrower H): one plan — and one set of cacheable bricks — serves
+        # every width up to plan_features.
+        plan_shape = (dense_shape[0],
+                      max(cfg.plan_features or 0, dense_shape[1]))
+        key = (id(a), a.nnz, a.shape, plan_shape, transpose)
         hit = self._prepared.pop(key, None)
         if hit is not None:
             self._prepared[key] = hit  # re-insert: most-recently-used
             return hit
-        cfg = self.config
         if transpose:
             # Plan on Aᵀ: the backward output dH is (n_cols, F), so M_C and
             # the Eq. 7 segment budget must be sized for the transposed
             # orientation (they differ whenever A is non-square).
             a_t = self.transpose_of(a)
             mem = plan_memory_dense_features(
-                a_t, n_nodes=dense_shape[0], feature_dim=dense_shape[1],
+                a_t, n_nodes=plan_shape[0], feature_dim=plan_shape[1],
                 m_total=cfg.device_budget_bytes)
             if not mem.feasible:
                 raise MemoryError(
@@ -167,12 +195,20 @@ class AiresSpGEMM:
                                           a_t=a_t)
             stream_a = a_t
         else:
-            mem, plan = self.plan(a, dense_shape)
+            mem, plan = self.plan(a, plan_shape)
             stream_a = a
+        cache_ns = (f"{self.graph_cache_prefix(a)}"
+                    f":{'bwd' if transpose else 'fwd'}"
+                    f":w{plan_shape[1]}:b{cfg.device_budget_bytes}")
         prepared = _Prepared(
             a=stream_a, mem=mem, plan=plan, segs=list(plan.segments),
             ells=list(segments_to_block_ell(stream_a, plan,
-                                            bm=cfg.bm, bk=cfg.bk)))
+                                            bm=cfg.bm, bk=cfg.bk)),
+            cache_ns=cache_ns)
+        if self.segment_cache is not None:
+            # Pin the source graph so the id()-derived namespace can't be
+            # recycled into stale hits while cached bricks live.
+            self.segment_cache.pin(cache_ns, a)
         self._prepared[key] = prepared
         while len(self._prepared) > self.PREPARED_CACHE_MAX:
             self._prepared.pop(next(iter(self._prepared)))
@@ -188,7 +224,8 @@ class AiresSpGEMM:
         """
         cfg = self.config
 
-        def upload(ell):
+        def upload(payload):
+            _, ell = payload
             return (
                 jax.device_put(jnp.asarray(ell.blocks)),
                 jax.device_put(jnp.asarray(ell.col_tile)),
@@ -202,11 +239,32 @@ class AiresSpGEMM:
                 ell, blocks=blocks, col_tile=col_tile, n_tiles=n_tiles)
             return consume_one(ell_dev, i)
 
+        cache = self.segment_cache
+        cache_lookup = cache_store = None
+        if cache is not None:
+            def _key(payload):
+                i, ell = payload
+                return SegmentKey(prepared.cache_ns, i, cfg.wire_format,
+                                  tuple(ell.blocks.shape))
+
+            def cache_lookup(payload):
+                return cache.get(_key(payload), nbytes=payload[1].nbytes())
+
+            def cache_store(payload, dev):
+                cache.put(_key(payload), dev, payload[1].nbytes())
+
         streamer = DoubleBufferedStreamer(
             upload, consume, depth=cfg.stream_depth,
             deadline_s=cfg.straggler_deadline_s,
-            payload_nbytes=lambda ell: ell.nbytes())
-        parts = streamer.run_all(prepared.ells)
+            payload_nbytes=lambda payload: payload[1].nbytes(),
+            cache_lookup=cache_lookup, cache_store=cache_store)
+        promoted0 = cache.stats.promoted_bytes if cache is not None else 0
+        parts = streamer.run_all(list(enumerate(prepared.ells)))
+        if cache is not None:
+            # Host-tier hits re-crossed the bus via device_put promotions;
+            # surface them so uploaded_bytes=0 can't misread as zero traffic.
+            streamer.stats.promoted_bytes = (
+                cache.stats.promoted_bytes - promoted0)
         out = jnp.concatenate(
             [p[: s.n_rows] for p, s in zip(parts, prepared.segs)], axis=0)
         return out, streamer.stats
@@ -342,6 +400,7 @@ def gcn_epoch(
     dataset: str = "",
     backward_factor: float = 2.0,
     engine_config: Optional[AiresConfig] = None,
+    segment_cache: Optional[TieredSegmentCache] = None,
 ) -> EpochMetrics:
     """One training epoch of the Fig. 1 chain under a given scheduler.
 
@@ -361,16 +420,21 @@ def gcn_epoch(
     """
     if mode == "execute":
         return _execute_epoch(a, h0, weights, scheduler_name, spec,
-                              device_budget, dataset, engine_config)
+                              device_budget, dataset, engine_config,
+                              segment_cache)
     return _simulate_epoch(a, h0, weights, scheduler_name, spec,
-                           device_budget, dataset, backward_factor)
+                           device_budget, dataset, backward_factor,
+                           segment_cache)
 
 
 def _simulate_epoch(a, h0, weights, scheduler_name, spec, device_budget,
-                    dataset, backward_factor) -> EpochMetrics:
+                    dataset, backward_factor,
+                    segment_cache=None) -> EpochMetrics:
     from repro.core.memory_model import FeatureSpec
 
-    sched = SCHEDULERS[scheduler_name](spec, device_budget=device_budget)
+    kw = ({"segment_cache": segment_cache}
+          if segment_cache is not None and scheduler_name == "aires" else {})
+    sched = SCHEDULERS[scheduler_name](spec, device_budget=device_budget, **kw)
     per_layer: List[ScheduleMetrics] = []
     makespan = 0.0
     total_bytes = 0
@@ -393,11 +457,11 @@ def _simulate_epoch(a, h0, weights, scheduler_name, spec, device_budget,
 
 
 def _execute_epoch(a, h0, weights, scheduler_name, spec, device_budget,
-                   dataset, engine_config) -> EpochMetrics:
+                   dataset, engine_config, segment_cache=None) -> EpochMetrics:
     from repro.core.memory_model import FeatureSpec
 
     cfg = engine_config or AiresConfig(device_budget_bytes=device_budget)
-    engine = AiresSpGEMM(cfg)
+    engine = AiresSpGEMM(cfg, segment_cache=segment_cache)
     engine.reset_stats_logs()
     sched = SCHEDULERS[scheduler_name](spec, device_budget=device_budget)
     # One transpose, shared with the engine's backward streaming plans.

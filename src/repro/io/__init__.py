@@ -7,9 +7,10 @@ from repro.io.tiers import (
     TPU_V5E_SYSTEM,
 )
 from repro.io.streamer import DoubleBufferedStreamer, StreamStats
+from repro.io.segment_cache import CacheStats, SegmentKey, TieredSegmentCache
 
 __all__ = [
     "MemoryTier", "TierSpec", "TieredMemorySystem", "TransferRecord",
     "PAPER_GPU_SYSTEM", "TPU_V5E_SYSTEM", "DoubleBufferedStreamer",
-    "StreamStats",
+    "StreamStats", "CacheStats", "SegmentKey", "TieredSegmentCache",
 ]

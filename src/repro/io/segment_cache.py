@@ -1,0 +1,293 @@
+"""Tiered LRU segment cache — device-resident BlockELL bricks with host spill.
+
+AIRES's Phase III keeps the output C on device for layer chaining, but the
+execute path still re-streamed every BlockELL segment each layer and each
+epoch. This cache closes that gap: uploaded device payloads are retained
+under a device byte budget; LRU eviction *demotes* bricks device→host
+instead of discarding them, and a later hit *promotes* them back. Both moves
+are charged through a `TieredMemorySystem` (DMA path, tagged
+``cache/demote`` / ``cache/promote``) so the simulate-mode `bytes_by_path`
+stays honest: a device-tier hit is free wire traffic, a host-tier hit pays
+one HtoD transfer, a miss pays the full upload.
+
+Keys are `(graph_id, segment_id, wire_format, shape)` — graph identity plus
+the segment's position in its RoBW plan plus the wire layout, so two plans
+over the same graph (e.g. different planning widths) never alias. Callers
+may `pin` the source graph object per graph_id: id()-derived graph ids then
+cannot be recycled into stale hits while the cache lives (the same
+immutability contract as `AiresSpGEMM`'s prepared cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+from typing import Any, Callable, Dict, Hashable, Optional, Tuple
+
+from repro.io.tiers import MemoryTier, Path, TieredMemorySystem
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentKey:
+    """Identity of one cached wire segment."""
+
+    graph_id: Hashable
+    segment_id: Hashable     # (plan token, index-in-plan)
+    wire_format: str         # "bricks" | "csr"
+    shape: Tuple[int, ...]   # wire-payload shape (disambiguates re-plans)
+
+
+@dataclasses.dataclass
+class CacheStats:
+    device_hits: int = 0
+    host_hits: int = 0       # promoted device<-host
+    misses: int = 0
+    hit_bytes: int = 0       # wire bytes served from either tier
+    miss_bytes: int = 0      # wire bytes the caller had to upload
+    demoted_bytes: int = 0   # device->host spills
+    promoted_bytes: int = 0  # host->device refills
+    evicted_bytes: int = 0   # dropped from the host tier entirely
+
+    @property
+    def hits(self) -> int:
+        return self.device_hits + self.host_hits
+
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+@dataclasses.dataclass
+class _Entry:
+    value: Any
+    nbytes: int
+
+
+def demote_to_host(value: Any):
+    """Default demotion: device arrays → host numpy (bit-identical copy)."""
+    import jax
+    import numpy as np
+
+    return jax.tree_util.tree_map(
+        lambda leaf: np.asarray(leaf) if isinstance(leaf, jax.Array) else leaf,
+        value)
+
+
+def promote_to_device(value: Any):
+    """Default promotion: host numpy arrays → device buffers."""
+    import jax
+    import numpy as np
+
+    return jax.tree_util.tree_map(
+        lambda leaf: jax.device_put(leaf) if isinstance(leaf, np.ndarray)
+        else leaf, value)
+
+
+class TieredSegmentCache:
+    """Device-budget-aware LRU over wire segments, with a host spill tier.
+
+    * device tier — entries live in upload form (e.g. jax device buffers);
+      `device_budget_bytes` is a hard cap, eviction demotes LRU-first.
+    * host tier — demoted entries (converted by `demote`, default: numpy
+      copies); `host_budget_bytes` caps it (None = unbounded); overflow is
+      dropped for good and counted in `stats.evicted_bytes`.
+
+    `tms` (constructor or per-call) receives the DMA transfer for every
+    demotion/promotion; `get_with_cost` additionally returns the modeled
+    seconds of the promotion so schedulers can put host-tier hits on the
+    pipeline critical path.
+
+    Semantics of the device budget: it models *spare* device memory the
+    operator dedicates to brick retention, beyond the streaming working set
+    (M_B + M_C + M_A) — the cache does not subtract from the scheduler's
+    Eq. 5-7 budget. Sizing it larger than the actually-spare HBM is the
+    operator's (unchecked) claim.
+    """
+
+    def __init__(
+        self,
+        device_budget_bytes: int,
+        host_budget_bytes: Optional[int] = None,
+        tms: Optional[TieredMemorySystem] = None,
+        demote: Callable[[Any], Any] = demote_to_host,
+        promote: Callable[[Any], Any] = promote_to_device,
+    ):
+        if device_budget_bytes <= 0:
+            raise ValueError("device_budget_bytes must be > 0")
+        self.device_budget_bytes = int(device_budget_bytes)
+        self.host_budget_bytes = (None if host_budget_bytes is None
+                                  else int(host_budget_bytes))
+        self.tms = tms
+        self._demote = demote
+        self._promote = promote
+        self._device: "OrderedDict[SegmentKey, _Entry]" = OrderedDict()
+        self._host: "OrderedDict[SegmentKey, _Entry]" = OrderedDict()
+        self._device_used = 0
+        self._host_used = 0
+        self._pins: Dict[Hashable, Any] = {}
+        self._lock = threading.Lock()
+        self.stats = CacheStats()
+        # Convenience mirror of the last get()'s promotion seconds. NOT
+        # race-free across threads — concurrent callers should use
+        # get_with_cost() instead.
+        self.last_get_transfer_s: float = 0.0
+
+    # ---- introspection ---------------------------------------------------
+
+    @property
+    def device_used_bytes(self) -> int:
+        return self._device_used
+
+    @property
+    def host_used_bytes(self) -> int:
+        return self._host_used
+
+    def __len__(self) -> int:
+        return len(self._device) + len(self._host)
+
+    def __contains__(self, key: SegmentKey) -> bool:
+        return key in self._device or key in self._host
+
+    def tier_of(self, key: SegmentKey) -> Optional[MemoryTier]:
+        if key in self._device:
+            return MemoryTier.DEVICE
+        if key in self._host:
+            return MemoryTier.HOST
+        return None
+
+    # ---- maintenance -----------------------------------------------------
+
+    def pin(self, graph_id: Hashable, obj: Any) -> None:
+        """Hold a strong reference to the graph behind `graph_id` so an
+        id()-derived graph id cannot be recycled while entries live."""
+        self._pins[graph_id] = obj
+
+    def invalidate_graph(self, graph_id: Hashable) -> int:
+        """Drop every entry (both tiers) and the pin for one graph."""
+        return self.invalidate_prefix(str(graph_id), exact=graph_id)
+
+    def invalidate_prefix(self, prefix: str, exact: Hashable = None) -> int:
+        """Drop entries whose graph_id is `exact` or startswith `prefix` —
+        one graph spans several namespaces (direction × plan width), all
+        sharing the graph-identity prefix."""
+        with self._lock:
+            dropped = 0
+            for store in (self._device, self._host):
+                for key in [k for k in store
+                            if k.graph_id == exact
+                            or str(k.graph_id).startswith(prefix)]:
+                    dropped += 1
+                    self._account(store, -store.pop(key).nbytes)
+            for gid in [g for g in self._pins
+                        if g == exact or str(g).startswith(prefix)]:
+                del self._pins[gid]
+            return dropped
+
+    def clear(self) -> None:
+        with self._lock:
+            self._device.clear()
+            self._host.clear()
+            self._device_used = 0
+            self._host_used = 0
+            self._pins.clear()
+
+    # ---- the cache protocol ----------------------------------------------
+
+    def get(self, key: SegmentKey, nbytes: int = 0,
+            tms: Optional[TieredMemorySystem] = None) -> Optional[Any]:
+        """Lookup; `nbytes` (the wire size the caller would otherwise
+        upload) feeds hit/miss byte accounting. Returns the device-form
+        value, or None on miss."""
+        return self.get_with_cost(key, nbytes=nbytes, tms=tms)[0]
+
+    def get_with_cost(self, key: SegmentKey, nbytes: int = 0,
+                      tms: Optional[TieredMemorySystem] = None):
+        """Like get(), but returns (value, transfer_seconds): the modeled
+        cost of the promotion this lookup triggered (0.0 for a device-tier
+        hit or a miss). Race-free, unlike reading last_get_transfer_s."""
+        with self._lock:
+            self.last_get_transfer_s = 0.0
+            entry = self._device.get(key)
+            if entry is not None:
+                self._device.move_to_end(key)
+                self.stats.device_hits += 1
+                self.stats.hit_bytes += nbytes
+                return entry.value, 0.0
+            entry = self._host.pop(key, None)
+            if entry is not None:
+                self._host_used -= entry.nbytes
+                value = self._promote(entry.value)
+                cost = self._charge(
+                    tms, MemoryTier.HOST, MemoryTier.DEVICE, entry.nbytes,
+                    "cache/promote")
+                self.last_get_transfer_s = cost
+                self.stats.promoted_bytes += entry.nbytes
+                self.stats.host_hits += 1
+                self.stats.hit_bytes += nbytes
+                self._insert_device(key, _Entry(value, entry.nbytes), tms)
+                return value, cost
+            self.stats.misses += 1
+            self.stats.miss_bytes += nbytes
+            return None, 0.0
+
+    def put(self, key: SegmentKey, value: Any, nbytes: int,
+            tms: Optional[TieredMemorySystem] = None,
+            pin: Any = None) -> None:
+        """Insert/refresh a device-form value of `nbytes` wire bytes."""
+        with self._lock:
+            if pin is not None:
+                self._pins[key.graph_id] = pin
+            stale = self._device.pop(key, None)
+            if stale is not None:
+                self._device_used -= stale.nbytes
+            stale = self._host.pop(key, None)
+            if stale is not None:
+                self._host_used -= stale.nbytes
+            self._insert_device(key, _Entry(value, int(nbytes)), tms)
+
+    def _account(self, store, delta: int) -> None:
+        if store is self._device:
+            self._device_used += delta
+        else:
+            self._host_used += delta
+
+    # ---- internals (lock held) -------------------------------------------
+
+    def _charge(self, tms: Optional[TieredMemorySystem], src: MemoryTier,
+                dst: MemoryTier, nbytes: int, tag: str) -> float:
+        tms = tms if tms is not None else self.tms
+        if tms is None or nbytes <= 0:
+            return 0.0
+        return tms.transfer(Path.DMA, src, dst, int(nbytes), tag=tag)
+
+    def _insert_device(self, key: SegmentKey, entry: _Entry,
+                       tms: Optional[TieredMemorySystem]) -> None:
+        if entry.nbytes > self.device_budget_bytes:
+            # Never holds on device: spill the fresh upload straight down.
+            self._demote_entry(key, entry, tms)
+            return
+        while self._device_used + entry.nbytes > self.device_budget_bytes:
+            victim_key, victim = self._device.popitem(last=False)
+            self._device_used -= victim.nbytes
+            self._demote_entry(victim_key, victim, tms)
+        self._device[key] = entry
+        self._device_used += entry.nbytes
+
+    def _demote_entry(self, key: SegmentKey, entry: _Entry,
+                      tms: Optional[TieredMemorySystem]) -> None:
+        """Move a device-form entry down a tier (or drop it if it can't fit)."""
+        if self.host_budget_bytes is not None \
+                and entry.nbytes > self.host_budget_bytes:
+            self.stats.evicted_bytes += entry.nbytes
+            return
+        self._charge(tms, MemoryTier.DEVICE, MemoryTier.HOST,
+                     entry.nbytes, "cache/demote")
+        self.stats.demoted_bytes += entry.nbytes
+        entry = _Entry(self._demote(entry.value), entry.nbytes)
+        if self.host_budget_bytes is not None:
+            while self._host_used + entry.nbytes > self.host_budget_bytes:
+                _, dropped = self._host.popitem(last=False)
+                self._host_used -= dropped.nbytes
+                self.stats.evicted_bytes += dropped.nbytes
+        self._host[key] = entry
+        self._host_used += entry.nbytes

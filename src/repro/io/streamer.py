@@ -23,6 +23,11 @@ class StreamStats:
     compute_seconds: float = 0.0   # wall time blocked on result readiness
     reissues: int = 0              # straggler mitigations
     uploaded_bytes: int = 0        # wire bytes (when payload_nbytes is given)
+    cache_hits: int = 0            # segments served from the segment cache
+    cache_hit_bytes: int = 0       # wire bytes served from the cache
+    promoted_bytes: int = 0        # of those, host-tier promotions that DID
+    #                                re-cross the bus (true bus traffic is
+    #                                uploaded_bytes + promoted_bytes)
 
 
 class DoubleBufferedStreamer:
@@ -36,6 +41,12 @@ class DoubleBufferedStreamer:
     pipeline deeper when segments are small. A deadline (seconds) per
     segment triggers re-issue of the upload — the straggler mitigation used
     in multi-host deployments where a slow host NIC stalls one pipeline.
+
+    Optional cache hooks (the tiered segment cache, io/segment_cache.py):
+    `cache_lookup(payload)` returning non-None short-circuits the upload —
+    the segment is already device-resident, so its wire bytes land in
+    `cache_hit_bytes` instead of `uploaded_bytes`; after a miss's upload,
+    `cache_store(payload, device_payload)` retains it for the next epoch.
     """
 
     def __init__(
@@ -46,6 +57,8 @@ class DoubleBufferedStreamer:
         deadline_s: Optional[float] = None,
         max_reissue: int = 1,
         payload_nbytes: Optional[Callable[[Any], int]] = None,
+        cache_lookup: Optional[Callable[[Any], Optional[Any]]] = None,
+        cache_store: Optional[Callable[[Any, Any], None]] = None,
     ):
         if depth < 1:
             raise ValueError("depth must be >= 1")
@@ -55,11 +68,23 @@ class DoubleBufferedStreamer:
         self.deadline_s = deadline_s
         self.max_reissue = max_reissue
         self.payload_nbytes = payload_nbytes
+        self.cache_lookup = cache_lookup
+        self.cache_store = cache_store
         self.stats = StreamStats()
 
     def _upload_with_deadline(self, payload: Any) -> Any:
         nbytes = (int(self.payload_nbytes(payload))
                   if self.payload_nbytes is not None else 0)
+        if self.cache_lookup is not None:
+            t0 = time.perf_counter()
+            cached = self.cache_lookup(payload)
+            if cached is not None:
+                # Lookup cost includes any host->device promotion the cache
+                # performed — that is real transfer time, count it.
+                self.stats.put_seconds += time.perf_counter() - t0
+                self.stats.cache_hits += 1
+                self.stats.cache_hit_bytes += nbytes
+                return cached
         self.stats.uploaded_bytes += nbytes
         t0 = time.perf_counter()
         dev = self.upload(payload)
@@ -74,6 +99,8 @@ class DoubleBufferedStreamer:
                 t0 = time.perf_counter()
                 dev = self.upload(payload)
         self.stats.put_seconds += time.perf_counter() - t0
+        if self.cache_store is not None:
+            self.cache_store(payload, dev)
         return dev
 
     def run(self, payloads: Iterable[Any]) -> Iterator[Any]:

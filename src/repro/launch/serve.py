@@ -1,8 +1,13 @@
-"""Serving launcher: batched decode with KV/recurrent state.
+"""Serving launcher: batched decode with KV/recurrent state, or GCN serving.
 
 `serve(cfg, params, prompts, steps)` prefRuns a prefill then `steps` decode
 iterations for a batch of requests; the same serve_step is what the
 dry-run lowers at decode_32k / long_500k shapes.
+
+`--mode gcn` instead drives the out-of-core GCN serving engine
+(repro.runtime.engine): registered graphs, queued requests, batched
+streamed aggregation with the tiered segment cache — prints per-epoch
+uploaded vs cache-hit wire bytes.
 """
 from __future__ import annotations
 
@@ -44,14 +49,66 @@ def serve(cfg, params, prompts: np.ndarray, steps: int = 8):
     return np.stack(out, axis=1)
 
 
+def serve_gcn(scale: float = 1e-4, batch: int = 4, epochs: int = 2,
+              cache: bool = True, feature_dim: int = 16, seed: int = 0):
+    """Drive the multi-graph GCN serving engine; returns per-epoch reports."""
+    from repro.data import (
+        SUITESPARSE_SPECS, generate_graph, normalized_adjacency, scaled_spec,
+    )
+    from repro.runtime import EngineConfig, InferenceRequest, ServingEngine
+
+    rng = np.random.default_rng(seed)
+    graphs = {
+        name: normalized_adjacency(generate_graph(
+            scaled_spec(SUITESPARSE_SPECS[name], scale), seed=i))
+        for i, name in enumerate(("socLJ1", "rUSA"))
+    }
+    budget = max(int((a.nbytes() + 2 * a.n_rows * 64 * 4) * 0.6)
+                 for a in graphs.values())
+    eng = ServingEngine(EngineConfig(device_budget_bytes=budget,
+                                     cache_enabled=cache))
+    for name, a in graphs.items():
+        eng.register_graph(name, a)
+
+    reports = []
+    for _ in range(epochs):
+        for name, a in graphs.items():
+            for _ in range(batch):
+                h = rng.standard_normal(
+                    (a.n_rows, feature_dim)).astype(np.float32)
+                w = [rng.standard_normal(
+                    (feature_dim, feature_dim)).astype(np.float32)]
+                eng.submit(InferenceRequest(name, h, w))
+        reports.append(eng.run_batch())
+    return reports
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--mode", choices=("lm", "gcn"), default="lm")
+    ap.add_argument("--arch")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--epochs", type=int, default=2)
+    ap.add_argument("--no-cache", action="store_true",
+                    help="gcn mode: disable the tiered segment cache")
     args = ap.parse_args(argv)
 
+    if args.mode == "gcn":
+        reports = serve_gcn(batch=args.batch, epochs=args.epochs,
+                            cache=not args.no_cache)
+        for e, rep in enumerate(reports):
+            print(f"epoch {e}: {len(rep.results)} requests, "
+                  f"{rep.aggregation_passes} streamed passes, "
+                  f"uploaded {rep.uploaded_bytes} B, "
+                  f"cache-hit {rep.cache_hit_bytes} B "
+                  f"(promoted {rep.promoted_bytes} B, "
+                  f"hit rate {rep.hit_rate:.0%}) in {rep.wall_seconds:.2f}s")
+        return
+
+    if args.arch is None:
+        ap.error("--arch is required in lm mode")
     cfg = get_config(args.arch, smoke=True)
     params = init_params(cfg, jax.random.PRNGKey(0))
     prompts = np.random.default_rng(0).integers(

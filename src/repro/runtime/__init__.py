@@ -1,5 +1,13 @@
 from repro.runtime.supervisor import (
     Supervisor, SupervisorConfig, ElasticMesh, RunState,
 )
+from repro.runtime.engine import (
+    BatchReport, EngineConfig, InferenceRequest, InferenceResult,
+    ServingEngine,
+)
 
-__all__ = ["Supervisor", "SupervisorConfig", "ElasticMesh", "RunState"]
+__all__ = [
+    "Supervisor", "SupervisorConfig", "ElasticMesh", "RunState",
+    "BatchReport", "EngineConfig", "InferenceRequest", "InferenceResult",
+    "ServingEngine",
+]

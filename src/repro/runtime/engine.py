@@ -1,0 +1,294 @@
+"""Out-of-core GCN serving engine: multi-graph batching over AiresSpGEMM.
+
+The ROADMAP's serving target meets the paper's Phase III: requests against
+many resident graphs are queued, grouped by graph, and served through ONE
+`AiresSpGEMM` per graph — all engines sharing one tiered segment cache
+(`repro.io.segment_cache`), so the expensive part of a request (streaming
+BlockELL bricks host→device) amortizes across requests, layers and epochs.
+
+Three mechanisms do the work:
+
+  * one prepared plan per graph — every engine plans at the pinned width
+    `EngineConfig.max_batch_features` (`AiresConfig.plan_features`), so all
+    layer widths and all batch widths up to the pin share a single RoBW plan
+    and its cached bricks. This replaces leaning on `AiresSpGEMM`'s flat
+    `PREPARED_CACHE_MAX=8` LRU, which cycles when widths multiply.
+  * column-concat batching — X = A·[H₁|H₂|…] computes every queued
+    request's aggregation for a graph in a single streamed pass; outputs
+    split per request and the cheap dense transforms run per request.
+  * Phase III chaining — activations stay jax device arrays between layers
+    (relu((A H) W) chains), never round-tripping through host numpy until
+    the final result is handed back.
+
+Request semantics: a request with L weight matrices computes
+    h ← relu((A h) Wₗ) for l < L-1;  output = (A h) W_{L-1}
+(final layer linear); L = 0 returns the bare aggregation A·H.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.spgemm import AiresConfig, AiresSpGEMM
+from repro.io.segment_cache import CacheStats, TieredSegmentCache
+from repro.sparse.formats import CSR
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    """Knobs for the serving engine (see README "Serving engine")."""
+
+    device_budget_bytes: int
+    cache_enabled: bool = True
+    # Segment-cache tiers: device defaults to the streaming budget (the
+    # bricks the plan streams are exactly what is worth keeping resident),
+    # host to 8× that; None host budget = unbounded spill.
+    cache_device_bytes: Optional[int] = None
+    cache_host_bytes: Optional[int] = None
+    # Planning width: one plan serves all request/layer widths up to this,
+    # and batches are chunked so concatenated width never exceeds it.
+    max_batch_features: int = 64
+    bm: int = 8
+    bk: int = 8
+    align: int = 8
+    stream_depth: int = 2
+    straggler_deadline_s: Optional[float] = None
+    interpret: Optional[bool] = None
+
+
+@dataclasses.dataclass
+class InferenceRequest:
+    """One GCN inference against a registered graph."""
+
+    graph: str
+    features: np.ndarray                  # (n_nodes, F)
+    weights: Sequence[np.ndarray] = ()    # per-layer (F_in, F_out) chain
+    request_id: int = -1                  # assigned by submit()
+
+
+@dataclasses.dataclass
+class InferenceResult:
+    request_id: int
+    graph: str
+    output: np.ndarray
+
+
+@dataclasses.dataclass
+class BatchReport:
+    """One run_batch() drain: results + the I/O story of the batch."""
+
+    results: List[InferenceResult]
+    uploaded_bytes: int       # wire bytes freshly streamed host->device
+    cache_hit_bytes: int      # wire bytes served from the segment cache
+    promoted_bytes: int       # of those, host-tier hits re-crossing the bus
+    segments_streamed: int    # consume() invocations (incl. cache hits)
+    aggregation_passes: int   # streamed SpGEMM passes (batching merges these)
+    wall_seconds: float = 0.0
+
+    @property
+    def bus_bytes(self) -> int:
+        """Everything that actually crossed host->device this batch."""
+        return self.uploaded_bytes + self.promoted_bytes
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.uploaded_bytes + self.cache_hit_bytes
+        return self.cache_hit_bytes / total if total else 0.0
+
+
+class ServingEngine:
+    """Multi-graph out-of-core GCN inference with a shared segment cache.
+
+    Usage:
+        eng = ServingEngine(EngineConfig(device_budget_bytes=...))
+        eng.register_graph("socLJ1", adjacency_csr)
+        rid = eng.submit(InferenceRequest("socLJ1", h, weights=[w0, w1]))
+        report = eng.run_batch()          # drains the queue, grouped by graph
+
+    With `cache_enabled=False` every batch re-streams every segment — bit
+    for bit the PR-1 `AiresSpGEMM` behavior (the ablation baseline).
+    """
+
+    def __init__(self, config: EngineConfig):
+        self.config = config
+        self.cache: Optional[TieredSegmentCache] = None
+        if config.cache_enabled:
+            device_bytes = (config.cache_device_bytes
+                            or config.device_budget_bytes)
+            self.cache = TieredSegmentCache(
+                device_budget_bytes=device_bytes,
+                host_budget_bytes=config.cache_host_bytes)
+        self._graphs: "OrderedDict[str, CSR]" = OrderedDict()
+        self._engines: Dict[str, AiresSpGEMM] = {}
+        self._queue: List[InferenceRequest] = []
+        self._next_id = 0
+
+    # ---- graph registry --------------------------------------------------
+
+    def register_graph(self, name: str, a: CSR) -> None:
+        """Make a graph servable. CSRs are immutable once registered (the
+        cache keys on identity + structure, like AiresSpGEMM's plan cache)."""
+        if name in self._graphs:
+            raise ValueError(f"graph {name!r} already registered")
+        a.validate()
+        cfg = self.config
+        self._graphs[name] = a
+        self._engines[name] = AiresSpGEMM(
+            AiresConfig(
+                device_budget_bytes=cfg.device_budget_bytes,
+                bm=cfg.bm, bk=cfg.bk, align=cfg.align,
+                stream_depth=cfg.stream_depth,
+                straggler_deadline_s=cfg.straggler_deadline_s,
+                interpret=cfg.interpret,
+                plan_features=cfg.max_batch_features,
+            ),
+            segment_cache=self.cache)
+
+    def evict_graph(self, name: str) -> List[InferenceRequest]:
+        """Drop a graph, its engine, its cached segments (every namespace,
+        not just plans still in the prepared LRU), and any queued requests
+        against it — which are returned so the caller can re-route them."""
+        a = self._graphs.pop(name, None)
+        self._engines.pop(name, None)
+        if a is not None and self.cache is not None:
+            self.cache.invalidate_prefix(AiresSpGEMM.graph_cache_prefix(a))
+        orphaned = [r for r in self._queue if r.graph == name]
+        self._queue = [r for r in self._queue if r.graph != name]
+        return orphaned
+
+    @property
+    def graphs(self) -> List[str]:
+        return list(self._graphs)
+
+    def cache_stats(self) -> Optional[CacheStats]:
+        return self.cache.stats if self.cache is not None else None
+
+    # ---- request queue ---------------------------------------------------
+
+    def submit(self, request: InferenceRequest) -> int:
+        if request.graph not in self._graphs:
+            raise KeyError(f"graph {request.graph!r} not registered")
+        n = self._graphs[request.graph].n_rows
+        if request.features.shape[0] != n:
+            raise ValueError(
+                f"features rows {request.features.shape[0]} != graph nodes {n}")
+        request = dataclasses.replace(request, request_id=self._next_id)
+        self._next_id += 1
+        self._queue.append(request)
+        return request.request_id
+
+    def infer(self, graph: str, features: np.ndarray,
+              weights: Sequence[np.ndarray] = ()) -> np.ndarray:
+        """Convenience: run one request immediately, without draining (or
+        disturbing) other callers' queued requests."""
+        pending, self._queue = self._queue, []
+        try:
+            rid = self.submit(InferenceRequest(graph, features, weights))
+            report = self.run_batch()
+        finally:
+            self._queue = pending + self._queue
+        return next(r.output for r in report.results if r.request_id == rid)
+
+    # ---- batched execution -----------------------------------------------
+
+    def run_batch(self) -> BatchReport:
+        """Drain the queue: group by graph, batch aggregations per layer."""
+        queue, self._queue = self._queue, []
+        results: List[InferenceResult] = []
+        uploaded = hits = segments = passes = 0
+        t0 = time.perf_counter()
+        unknown = sorted({r.graph for r in queue} - set(self._graphs))
+        if unknown:
+            self._queue = queue + self._queue  # nothing consumed
+            raise KeyError(
+                f"queued requests reference unregistered graphs {unknown}")
+        promoted = 0
+        for name in self._graphs:  # registration order, deterministic
+            group = [r for r in queue if r.graph == name]
+            if not group:
+                continue
+            eng = self._engines[name]
+            mark = len(eng.forward_stats_log)
+            results.extend(self._run_graph_group(name, group))
+            for stats in eng.forward_stats_log[mark:]:
+                uploaded += stats.uploaded_bytes
+                hits += stats.cache_hit_bytes
+                promoted += stats.promoted_bytes
+                segments += stats.segments
+                passes += 1
+        results.sort(key=lambda r: r.request_id)
+        return BatchReport(
+            results=results, uploaded_bytes=uploaded, cache_hit_bytes=hits,
+            promoted_bytes=promoted, segments_streamed=segments,
+            aggregation_passes=passes,
+            wall_seconds=time.perf_counter() - t0)
+
+    def _run_graph_group(self, name: str,
+                         group: List[InferenceRequest]) -> List[InferenceResult]:
+        a = self._graphs[name]
+        eng = self._engines[name]
+        # Per-request device-resident state: (request, activation, next layer).
+        acts = [jnp.asarray(np.asarray(r.features, dtype=np.float32))
+                for r in group]
+        wss = [[jnp.asarray(np.asarray(w, dtype=np.float32)) for w in r.weights]
+               for r in group]
+        n_aggs = [max(len(ws), 1) for ws in wss]
+        outputs: Dict[int, np.ndarray] = {}
+        for layer in range(max(n_aggs)):
+            live = [i for i in range(len(group)) if layer < n_aggs[i]]
+            aggregated = self._batched_aggregate(
+                eng, a, [acts[i] for i in live])
+            for i, x in zip(live, aggregated):
+                ws = wss[i]
+                if layer < len(ws):
+                    h = x @ ws[layer]
+                    if layer < len(ws) - 1:
+                        h = jnp.maximum(h, 0.0)   # relu between layers
+                else:                             # bare aggregation request
+                    h = x
+                acts[i] = h
+                if layer == n_aggs[i] - 1:
+                    outputs[i] = np.asarray(h)
+        return [InferenceResult(group[i].request_id, name, outputs[i])
+                for i in range(len(group))]
+
+    def _batched_aggregate(self, eng: AiresSpGEMM, a: CSR,
+                           hs: List[jnp.ndarray]) -> List[jnp.ndarray]:
+        """A @ each h, merging requests into column-concat streamed passes.
+
+        Greedy chunking: pack requests into passes while the concatenated
+        width stays within max_batch_features; a single over-wide request
+        streams alone (AiresSpGEMM re-plans conservatively for it).
+        """
+        cap = self.config.max_batch_features
+        out: List[Optional[jnp.ndarray]] = [None] * len(hs)
+        chunk: List[int] = []
+        width = 0
+        for i, h in enumerate(hs):
+            f = int(h.shape[1])
+            if chunk and width + f > cap:
+                self._aggregate_chunk(eng, a, hs, chunk, out)
+                chunk, width = [], 0
+            chunk.append(i)
+            width += f
+        if chunk:
+            self._aggregate_chunk(eng, a, hs, chunk, out)
+        return out
+
+    @staticmethod
+    def _aggregate_chunk(eng, a, hs, chunk, out) -> None:
+        if len(chunk) == 1:
+            out[chunk[0]] = eng(a, hs[chunk[0]])
+            return
+        h_cat = jnp.concatenate([hs[i] for i in chunk], axis=1)
+        x_cat = eng(a, h_cat)
+        col = 0
+        for i in chunk:
+            f = int(hs[i].shape[1])
+            out[i] = x_cat[:, col:col + f]
+            col += f

@@ -1,0 +1,204 @@
+"""Property tests for the tiered segment cache (io/segment_cache.py).
+
+Invariants, each driven by hypothesis when installed and by a deterministic
+seeded sweep otherwise (the conftest/test_robw_property pattern — fallback,
+never skip):
+  * LRU order: device eviction is strictly least-recently-used, and a get()
+    refreshes recency.
+  * capacity: neither tier ever exceeds its byte budget, under any op mix.
+  * demote/promote round-trip: a brick that falls to the host tier and is
+    promoted back is bit-identical.
+  * byte accounting: hit_bytes + miss_bytes equals exactly the wire bytes
+    requested through get() — the invariant the serving metrics rely on.
+"""
+import importlib.util
+
+import numpy as np
+import pytest
+
+from repro.io import SegmentKey, TieredSegmentCache
+from repro.io.tiers import MemoryTier, PAPER_GPU_SYSTEM, TieredMemorySystem
+
+HAVE_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
+
+
+def _key(i, graph="g0"):
+    return SegmentKey(graph, i, "bricks", (i, 8, 8))
+
+
+# ---- deterministic unit behaviour ----------------------------------------
+
+def test_lru_eviction_demotes_in_order():
+    cache = TieredSegmentCache(device_budget_bytes=3)
+    for i in range(3):
+        cache.put(_key(i), f"seg{i}", 1)
+    cache.put(_key(3), "seg3", 1)           # evicts k0 (oldest)
+    assert cache.tier_of(_key(0)) == MemoryTier.HOST
+    assert cache.tier_of(_key(3)) == MemoryTier.DEVICE
+    cache.get(_key(1), nbytes=1)            # refresh k1
+    cache.put(_key(4), "seg4", 1)           # now k2 is LRU, not k1
+    assert cache.tier_of(_key(2)) == MemoryTier.HOST
+    assert cache.tier_of(_key(1)) == MemoryTier.DEVICE
+    assert cache.stats.demoted_bytes == 2
+
+
+def test_host_tier_hit_promotes_back_to_device():
+    cache = TieredSegmentCache(device_budget_bytes=2)
+    cache.put(_key(0), "a", 1)
+    cache.put(_key(1), "b", 1)
+    cache.put(_key(2), "c", 1)              # k0 demoted
+    assert cache.tier_of(_key(0)) == MemoryTier.HOST
+    assert cache.get(_key(0), nbytes=1) == "a"
+    assert cache.tier_of(_key(0)) == MemoryTier.DEVICE
+    assert cache.stats.host_hits == 1
+    assert cache.stats.promoted_bytes == 1
+
+
+def test_host_budget_drops_overflow_for_good():
+    cache = TieredSegmentCache(device_budget_bytes=1, host_budget_bytes=1)
+    cache.put(_key(0), "a", 1)
+    cache.put(_key(1), "b", 1)              # k0 -> host
+    cache.put(_key(2), "c", 1)              # k1 -> host, k0 dropped
+    assert _key(0) not in cache
+    assert cache.stats.evicted_bytes == 1
+    assert cache.get(_key(0), nbytes=1) is None
+
+
+def test_oversized_entry_spills_straight_to_host():
+    cache = TieredSegmentCache(device_budget_bytes=4)
+    cache.put(_key(0), "big", 9)
+    assert cache.tier_of(_key(0)) == MemoryTier.HOST
+    assert cache.device_used_bytes == 0
+    assert cache.get(_key(0), nbytes=9) == "big"  # served, promoted-or-held
+    assert cache.device_used_bytes <= 4
+
+
+def test_transfers_charged_through_tiered_memory_system():
+    tms = TieredMemorySystem(PAPER_GPU_SYSTEM)
+    cache = TieredSegmentCache(device_budget_bytes=2, tms=tms)
+    cache.put(_key(0), "a", 1)
+    cache.put(_key(1), "b", 1)
+    cache.put(_key(2), "c", 1)              # one demotion
+    cache.get(_key(0), nbytes=1)            # promotion (+ a demotion: full)
+    tags = [t.tag for t in tms.transfers]
+    assert tags == ["cache/demote", "cache/promote", "cache/demote"]
+    assert cache.last_get_transfer_s > 0.0
+    n_before = len(tms.transfers)
+    cache.get(_key(0), nbytes=1)            # device hit: free
+    assert cache.last_get_transfer_s == 0.0
+    assert len(tms.transfers) == n_before
+
+
+def test_invalidate_graph_drops_both_tiers():
+    cache = TieredSegmentCache(device_budget_bytes=2)
+    cache.put(_key(0, "gA"), "a", 1, pin="graph-object-A")
+    cache.put(_key(1, "gA"), "b", 1)
+    cache.put(_key(2, "gB"), "c", 1)        # demotes k0
+    assert cache.invalidate_graph("gA") == 2
+    assert len(cache) == 1
+    assert cache.tier_of(_key(2, "gB")) is not None
+
+
+# ---- the properties (plain functions — both drivers call these) ----------
+
+def check_capacity_and_accounting(seed):
+    """No op sequence may overrun a tier budget, and requested wire bytes
+    split exactly into hit_bytes + miss_bytes."""
+    rng = np.random.default_rng(seed)
+    dev_budget = int(rng.integers(4, 64))
+    host_budget = (int(rng.integers(4, 64))
+                   if rng.random() < 0.7 else None)
+    cache = TieredSegmentCache(dev_budget, host_budget)
+    keys = [_key(j, graph=f"g{j % 3}") for j in range(10)]
+    requested = 0
+    for _ in range(80):
+        k = keys[int(rng.integers(0, len(keys)))]
+        nb = int(rng.integers(1, dev_budget + 16))
+        if rng.random() < 0.5:
+            requested += nb
+            cache.get(k, nbytes=nb)
+        else:
+            cache.put(k, ("payload", k.segment_id, nb), nb)
+        assert cache.device_used_bytes <= dev_budget
+        if host_budget is not None:
+            assert cache.host_used_bytes <= host_budget
+    st = cache.stats
+    assert st.hit_bytes + st.miss_bytes == requested
+
+
+def check_lru_keeps_newest(seed):
+    """After n distinct 1-byte puts into a k-slot device tier, exactly the
+    last k live on device and the earlier ones were demoted oldest-first."""
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(2, 8))
+    n = int(rng.integers(k + 1, 20))
+    cache = TieredSegmentCache(device_budget_bytes=k)
+    for i in range(n):
+        cache.put(_key(i), i, 1)
+    for i in range(n - k):
+        assert cache.tier_of(_key(i)) == MemoryTier.HOST
+    for i in range(n - k, n):
+        assert cache.tier_of(_key(i)) == MemoryTier.DEVICE
+    # host tier preserves demotion (FIFO) order
+    host_keys = [key.segment_id for key in cache._host]
+    assert host_keys == sorted(host_keys)
+
+
+def check_demote_promote_bit_identical(seed):
+    """Bricks that bounce device->host->device come back bit-identical."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    n_bricks = int(rng.integers(3, 7))
+    arrays = [rng.standard_normal((int(rng.integers(1, 5)), 8, 8))
+              .astype(np.float32) for _ in range(n_bricks)]
+    nbytes = [a.nbytes for a in arrays]
+    # device tier holds barely one brick: every put demotes the previous
+    cache = TieredSegmentCache(device_budget_bytes=max(nbytes))
+    for i, arr in enumerate(arrays):
+        cache.put(_key(i), (jnp.asarray(arr), f"meta{i}"), nbytes[i])
+    for i, arr in enumerate(arrays):
+        value = cache.get(_key(i), nbytes=nbytes[i])
+        assert value is not None, "demoted bricks must remain servable"
+        got, meta = value
+        assert meta == f"meta{i}"
+        np.testing.assert_array_equal(np.asarray(got), arr)
+    assert cache.stats.demoted_bytes > 0
+    assert cache.stats.promoted_bytes > 0
+
+
+# ---- hypothesis driver ---------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_capacity_and_accounting(seed):
+        check_capacity_and_accounting(seed)
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_lru_keeps_newest(seed):
+        check_lru_keeps_newest(seed)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_demote_promote_bit_identical(seed):
+        check_demote_promote_bit_identical(seed)
+
+
+# ---- deterministic fallback driver (no hypothesis installed) -------------
+
+else:
+    @pytest.mark.parametrize("seed", range(25))
+    def test_capacity_and_accounting(seed):
+        check_capacity_and_accounting(seed)
+
+    @pytest.mark.parametrize("seed", range(25))
+    def test_lru_keeps_newest(seed):
+        check_lru_keeps_newest(seed)
+
+    @pytest.mark.parametrize("seed", range(10))
+    def test_demote_promote_bit_identical(seed):
+        check_demote_promote_bit_identical(seed)

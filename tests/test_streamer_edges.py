@@ -1,0 +1,139 @@
+"""DoubleBufferedStreamer edge cases (Phase II hardening sweep, ISSUE 2).
+
+Covers the corners the serving engine leans on: deep pipelines (depth>2),
+straggler re-issue accounting, empty payload iterables, in-order delivery
+under a slow consumer, and the segment-cache hooks.
+"""
+import time
+
+import pytest
+
+from repro.io import DoubleBufferedStreamer
+
+
+def _mk(depth=2, uploads=None, consumed=None, **kw):
+    uploads = uploads if uploads is not None else []
+    consumed = consumed if consumed is not None else []
+    return DoubleBufferedStreamer(
+        upload=lambda p: (uploads.append(p), p)[1],
+        consume=lambda p, i: (consumed.append((p, i)), p * 10)[1],
+        depth=depth, **kw)
+
+
+def test_depth_must_be_positive():
+    with pytest.raises(ValueError):
+        _mk(depth=0)
+
+
+@pytest.mark.parametrize("depth", [3, 4, 7, 100])
+def test_deeper_pipelines_preserve_order(depth):
+    uploads, consumed = [], []
+    streamer = _mk(depth=depth, uploads=uploads, consumed=consumed)
+    out = streamer.run_all(list(range(10)))
+    assert out == [i * 10 for i in range(10)]
+    assert [c[1] for c in consumed] == list(range(10))
+    assert uploads == list(range(10))
+    assert streamer.stats.segments == 10
+
+
+def test_prefetch_depth_bounds_inflight_uploads():
+    """With depth=d, at most d uploads run ahead of the consumer."""
+    uploaded, consumed = [], []
+    lead = []
+
+    streamer = DoubleBufferedStreamer(
+        upload=lambda p: (uploaded.append(p), p)[1],
+        consume=lambda p, i: (consumed.append(p),
+                              lead.append(len(uploaded) - len(consumed)),
+                              p)[2],
+        depth=3)
+    streamer.run_all(list(range(12)))
+    # when consume(k) runs, uploads may lead it by at most depth
+    assert max(lead) <= 3
+    assert consumed == list(range(12))
+
+
+def test_empty_payload_iterable():
+    streamer = _mk()
+    assert streamer.run_all([]) == []
+    assert streamer.run_all(iter(())) == []
+    st = streamer.stats
+    assert (st.segments, st.uploaded_bytes, st.reissues) == (0, 0, 0)
+
+
+def test_in_order_yields_under_slow_consume():
+    """Regression: a consumer slower than the producer must not reorder or
+    drop results (the pipeline refills while the consumer lags)."""
+    order = []
+
+    def slow_consume(p, i):
+        time.sleep(0.002 if i % 2 else 0.006)  # jittered slowness
+        order.append(i)
+        return p
+
+    streamer = DoubleBufferedStreamer(
+        upload=lambda p: p, consume=slow_consume, depth=3)
+    got = list(streamer.run(list(range(8))))
+    assert got == list(range(8))
+    assert order == list(range(8))
+
+
+def test_deadline_reissue_counts_bytes_and_events():
+    def slow_upload(p):
+        time.sleep(0.02)
+        return p
+
+    streamer = DoubleBufferedStreamer(
+        upload=slow_upload, consume=lambda p, i: p,
+        depth=1, deadline_s=0.001, max_reissue=2,
+        payload_nbytes=lambda p: 100)
+    streamer.run_all([1, 2])
+    st = streamer.stats
+    assert st.reissues >= 2            # both segments blow the deadline
+    assert st.reissues <= 4            # bounded by max_reissue per segment
+    # every re-issue is real retransmitted wire traffic
+    assert st.uploaded_bytes == 100 * (2 + st.reissues)
+
+
+def test_no_deadline_means_no_reissue():
+    streamer = DoubleBufferedStreamer(
+        upload=lambda p: p, consume=lambda p, i: p, depth=2,
+        payload_nbytes=lambda p: 7)
+    streamer.run_all(list(range(5)))
+    assert streamer.stats.reissues == 0
+    assert streamer.stats.uploaded_bytes == 35
+
+
+def test_cache_hooks_split_hit_and_miss_bytes():
+    store = {}
+    uploads = []
+
+    streamer = DoubleBufferedStreamer(
+        upload=lambda p: (uploads.append(p), p * 2)[1],
+        consume=lambda p, i: p,
+        depth=2,
+        payload_nbytes=lambda p: 10,
+        cache_lookup=store.get,
+        cache_store=lambda p, dev: store.__setitem__(p, dev))
+    out1 = streamer.run_all([1, 2, 3])
+    assert out1 == [2, 4, 6]
+    assert streamer.stats.uploaded_bytes == 30
+    assert streamer.stats.cache_hit_bytes == 0
+
+    out2 = streamer.run_all([1, 2, 3])   # warm: everything served from store
+    assert out2 == [2, 4, 6]
+    assert uploads == [1, 2, 3]          # no second upload
+    assert streamer.stats.uploaded_bytes == 30
+    assert streamer.stats.cache_hits == 3
+    assert streamer.stats.cache_hit_bytes == 30
+
+
+def test_cache_miss_none_falls_through_to_upload():
+    calls = []
+    streamer = DoubleBufferedStreamer(
+        upload=lambda p: p,
+        consume=lambda p, i: p,
+        cache_lookup=lambda p: (calls.append(p), None)[1])
+    assert streamer.run_all([5]) == [5]
+    assert calls == [5]
+    assert streamer.stats.cache_hits == 0
