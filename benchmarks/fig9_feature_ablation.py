@@ -16,14 +16,14 @@ import numpy as np
 
 from benchmarks.common import SCALE, budget_for, csv_row, dataset, feature_spec
 from repro.core import FeatureSpec, SCHEDULERS, gcn_epoch
-from repro.io import TieredSegmentCache
+from repro.io import ShardedSegmentCache, TieredSegmentCache
 from repro.io.tiers import PAPER_GPU_SYSTEM
 
 DATASET = "kV2a"
 FEATURE_SIZES = [16, 32, 64, 128, 256]
 
 
-def run(cache: bool = False) -> List[str]:
+def run(cache: bool = False, shards: int = 0) -> List[str]:
     rows = [f"# fig9 feature-size ablation on {DATASET} (scale={SCALE})"]
     a = dataset(DATASET)
     for f in FEATURE_SIZES:
@@ -43,27 +43,44 @@ def run(cache: bool = False) -> List[str]:
             # ablation models an operator dedicating as much spare HBM
             # again to brick retention (see TieredSegmentCache docstring:
             # the tier is spare memory beyond the Eq. 5-7 working set).
-            seg_cache = TieredSegmentCache(device_budget_bytes=budget)
-            sched = SCHEDULERS["aires"](PAPER_GPU_SYSTEM,
-                                        device_budget=budget,
-                                        segment_cache=seg_cache)
-            warm = cold = None
-            for _ in range(2):  # epoch 1 fills, epoch 2 hits
-                cold, warm = warm, sched.run(a, feat, dataset=DATASET).metrics
-            rows.append(csv_row(
-                f"fig9/F{f}/aires+cache", warm.makespan_s * 1e6,
-                f"hit_bytes={warm.cache_hit_bytes}"
-                f";dma_bytes={warm.bytes_by_path.get('dma', 0)}"
-                f";speedup_vs_cold={cold.makespan_s/warm.makespan_s:.2f}"))
+            rows.append(_warm_epoch_row(
+                a, feat, budget, TieredSegmentCache(device_budget_bytes=budget),
+                f"fig9/F{f}/aires+cache"))
+        if shards:
+            # Mesh-sharded device tier: each shard retains 1/shards of the
+            # plan; warm-epoch remote hits ride ICI (cheap) instead of the
+            # PCIe-class DMA re-upload — the fig9 scale-out arm.
+            rows.append(_warm_epoch_row(
+                a, feat, budget,
+                ShardedSegmentCache(device_budget_bytes=budget,
+                                    n_shards=shards),
+                f"fig9/F{f}/aires+cache{shards}shard", ici=True))
     return rows
+
+
+def _warm_epoch_row(a, feat, budget, seg_cache, label, ici=False) -> str:
+    """Two consecutive AIRES epochs sharing `seg_cache`; report the warm one."""
+    sched = SCHEDULERS["aires"](PAPER_GPU_SYSTEM, device_budget=budget,
+                                segment_cache=seg_cache)
+    warm = cold = None
+    for _ in range(2):  # epoch 1 fills, epoch 2 hits
+        cold, warm = warm, sched.run(a, feat, dataset=DATASET).metrics
+    derived = (f"hit_bytes={warm.cache_hit_bytes}"
+               f";dma_bytes={warm.bytes_by_path.get('dma', 0)}")
+    if ici:
+        derived += f";ici_bytes={warm.bytes_by_path.get('ici', 0)}"
+    derived += f";speedup_vs_cold={cold.makespan_s/warm.makespan_s:.2f}"
+    return csv_row(label, warm.makespan_s * 1e6, derived)
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--cache", action="store_true",
                     help="add the tiered-segment-cache warm-epoch arm")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="add a mesh-sharded cache arm with this many shards")
     args = ap.parse_args(argv)
-    print("\n".join(run(cache=args.cache)))
+    print("\n".join(run(cache=args.cache, shards=args.shards)))
 
 
 if __name__ == "__main__":

@@ -9,6 +9,7 @@ Run:  PYTHONPATH=src python examples/gcn_serve.py
 """
 import numpy as np
 
+from repro.core import plan_memory_dense_features
 from repro.data import (
     SUITESPARSE_SPECS, generate_graph, normalized_adjacency, scaled_spec,
 )
@@ -22,7 +23,12 @@ road = normalized_adjacency(generate_graph(
     scaled_spec(SUITESPARSE_SPECS["rUSA"], 2e-5), seed=1))
 
 rng = np.random.default_rng(0)
-budget = int((lj.nbytes() + 2 * lj.n_rows * 64 * 4) * 0.6)
+# Feasible for the engine's pinned plan width (64) on both graphs, with
+# enough slack that each graph still streams in several segments.
+budget = max(
+    int(est.m_b + est.m_c + 0.6 * a.nbytes())
+    for a in (lj, road)
+    for est in [plan_memory_dense_features(a, a.n_rows, 64, float("inf"))])
 engine = ServingEngine(EngineConfig(device_budget_bytes=budget))
 engine.register_graph("socLJ1", lj)
 engine.register_graph("rUSA", road)

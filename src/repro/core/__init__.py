@@ -15,6 +15,7 @@ from repro.core.memory_model import (
     plan_memory,
     plan_memory_dense_features,
     plan_memory_spec,
+    plan_memory_unified,
     required_bytes,
     segment_budget,
 )
@@ -41,7 +42,8 @@ from repro.core.spgemm import AiresConfig, AiresSpGEMM, EpochMetrics, gcn_epoch
 __all__ = [
     "FeatureSpec", "MemoryEstimate", "calc_mem", "ell_bucket_capacity",
     "estimate_output_bytes", "estimate_resident_bytes", "plan_memory",
-    "plan_memory_dense_features", "plan_memory_spec", "required_bytes",
+    "plan_memory_dense_features", "plan_memory_spec", "plan_memory_unified",
+    "required_bytes",
     "segment_budget",
     "RoBWPlan", "RoBWSegment", "merge_partial_rows", "naive_partition",
     "robw_partition", "robw_transpose_plan", "segments_to_block_ell",

@@ -126,25 +126,33 @@ def plan_memory(
                           feasible=p > 0.0)
 
 
-def plan_memory_spec(
+def plan_memory_unified(
     a: CSR,
-    feat: "FeatureSpec",
+    feat,
     m_total: float,
     index_bytes: int = 4,
 ) -> MemoryEstimate:
-    """Eq. 5-7 with compressed (or dense) feature accounting.
+    """THE Eq. 5-7 planner — single reading for compressed AND dense features.
 
-    This is the paper-faithful path: α_A from CSR A, α_B/β_B/θ_B from the
-    compressed feature matrix, M_C from Eq. 5. With sparsity_pct=0 it
-    degrades gracefully to the dense-resident TPU mode (M_C capped at the
-    dense output footprint).
+    `feat` is anything `FeatureSpec.of` accepts. α_A/α_B enter Eq. 5 as the
+    DENSE value-array sizes, so α_A·(100−s_A)/100 recovers the compressed
+    nnz-bytes. This reading is self-consistent for hypersparse graph
+    adjacencies (s_A → 100%), where interpreting α as the compressed size
+    would make M_C vanish. The resulting estimate,
+    M_C ≈ 3·nnz_A·itemsize·(1 + α_B/α_A + dens_B), matches the expected
+    output fill E[matches per A-nonzero] ≈ F·dens_B for uniform B.
+
+    With sparsity_pct=0 (dense-resident TPU mode, DESIGN §2 dual-path) the
+    output C = X is dense (N, F), so M_C is additionally capped at the dense
+    footprint — Eq. 5 is an upper bound for compressed C.
+
+    Both historical entry points (`plan_memory_spec` for compressed feature
+    matrices, `plan_memory_dense_features` for the dense GCN aggregation)
+    are thin wrappers over this function, so they agree by construction —
+    in particular they produce the same M_C for dense features, which lets
+    the simulate↔execute cross-check hand both planners the same budget.
     """
-    # Eq. 5 with α = DENSE value-array sizes, so α_A·(100−s_A)/100 recovers
-    # the compressed nnz-bytes. This reading is self-consistent for
-    # hypersparse graph adjacencies (s_A → 100%), where interpreting α as
-    # the compressed size would make M_C vanish. The resulting estimate,
-    # M_C ≈ 3·nnz_A·itemsize·(1 + F/N + dens_B), matches the expected
-    # output fill E[matches per A-nonzero] ≈ F·dens_B for uniform B.
+    feat = FeatureSpec.of(feat)
     itemsize = float(a.data.dtype.itemsize)
     n_total = float(a.shape[0]) * float(a.shape[1])
     alpha_a_dense = n_total * itemsize
@@ -160,9 +168,23 @@ def plan_memory_spec(
                           feasible=p > 0.0)
 
 
+def plan_memory_spec(
+    a: CSR,
+    feat: "FeatureSpec",
+    m_total: float,
+    index_bytes: int = 4,
+) -> MemoryEstimate:
+    """Eq. 5-7 with compressed (or dense) feature accounting.
+
+    Thin wrapper over `plan_memory_unified` (the paper-faithful reading),
+    kept for its established name.
+    """
+    return plan_memory_unified(a, feat, m_total, index_bytes=index_bytes)
+
+
 def required_bytes(a: CSR, feat: "FeatureSpec") -> float:
     """Table II 'Memory Req.': combined size of A, B and C."""
-    est = plan_memory_spec(a, feat, m_total=float("inf"))
+    est = plan_memory_unified(a, feat, m_total=float("inf"))
     return float(a.nbytes()) + est.m_b + est.m_c
 
 
@@ -176,22 +198,16 @@ def plan_memory_dense_features(
 ) -> MemoryEstimate:
     """Memory plan for GCN aggregation X = Ã·H with *dense* device features.
 
-    On TPU the feature matrix H is dense-resident (DESIGN §2 dual-path).
-    M_B = N·F·bytes; C = X is dense (N_seg, F) so Eq. 5's output model reduces
-    to the dense row-block output; we still apply Eq. 5 for the compressed
-    bookkeeping arrays AIRES keeps for chaining.
+    On TPU the feature matrix H is dense-resident (DESIGN §2 dual-path):
+    M_B = N·F·bytes, and M_C is Eq. 5 capped at the dense X footprint. Thin
+    wrapper over `plan_memory_unified` with a sparsity_pct=0 FeatureSpec —
+    identical, by construction, to `plan_memory_spec` on the same dense
+    spec (the two used to read Eq. 5 differently; see ROADMAP history).
     """
-    m_b = float(n_nodes) * feature_dim * feature_bytes
-    alpha_a = float(a.nnz * a.data.dtype.itemsize)
-    n_total = float(a.shape[0]) * float(a.shape[1])
-    sparsity_a_pct = 100.0 * (1.0 - a.nnz / max(n_total, 1.0))
-    m_c = estimate_output_bytes(alpha_a, m_b, sparsity_a_pct, 0.0)
-    # Dense-output correction: cap M_C at the dense X footprint — Eq. 5 is an
-    # upper bound for compressed C; dense C is exactly N·F.
-    m_c = min(m_c, float(a.shape[0]) * feature_dim * feature_bytes)
-    p = segment_budget(m_total, m_c, m_b)
-    return MemoryEstimate(m_b=m_b, m_c=m_c, p=p, m_total=m_total,
-                          feasible=p > 0.0)
+    return plan_memory_unified(
+        a, FeatureSpec(n_nodes, feature_dim, feature_bytes, 0.0,
+                       index_bytes=index_bytes),
+        m_total, index_bytes=index_bytes)
 
 
 def calc_mem(k_rows: int, q_nnz: int, value_bytes: int = 4,
@@ -208,6 +224,10 @@ def ell_bucket_capacity(true_width: int, buckets: Optional[list] = None) -> int:
 
     TPU adaptation of dynamic allocation: segments are padded to the chosen
     bucket so recompiles only happen across buckets, not per segment.
+
+    With an explicit bucket list, a `true_width` larger than every bucket is
+    an error: silently returning `max(buckets)` would pad the segment to a
+    capacity *smaller* than its true tile width, truncating nonzeros.
     """
     if true_width <= 0:
         return 1
@@ -215,5 +235,9 @@ def ell_bucket_capacity(true_width: int, buckets: Optional[list] = None) -> int:
         for b in sorted(buckets):
             if b >= true_width:
                 return b
-        return max(buckets)
+        raise ValueError(
+            f"ell_bucket_capacity: true_width {true_width} exceeds every "
+            f"explicit bucket {sorted(buckets)} — a segment padded to "
+            f"{max(buckets)} would silently truncate; add a larger bucket "
+            "or omit `buckets` for the power-of-two path")
     return 1 << max(0, math.ceil(math.log2(true_width)))

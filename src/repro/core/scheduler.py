@@ -33,7 +33,7 @@ import numpy as np
 from repro.core.memory_model import (
     FeatureSpec,
     MemoryEstimate,
-    plan_memory_spec,
+    plan_memory_unified,
     required_bytes,
 )
 from repro.core.robw import (
@@ -44,6 +44,7 @@ from repro.core.robw import (
     segments_to_block_ell,
 )
 from repro.io.segment_cache import SegmentKey, TieredSegmentCache
+from repro.io.shard_cache import ShardedSegmentCache
 from repro.io.tiers import (
     MemoryTier,
     OutOfMemory,
@@ -175,7 +176,8 @@ class AiresScheduler(_BaseScheduler):
 
     def __init__(self, *args, bm: int = 128, bk: int = 128, align: int = 8,
                  wire_format: Literal["csr", "bricks"] = "csr",
-                 segment_cache: Optional[TieredSegmentCache] = None, **kw):
+                 segment_cache: Optional[
+                     "TieredSegmentCache | ShardedSegmentCache"] = None, **kw):
         super().__init__(*args, **kw)
         self.bm = bm
         self.bk = bk
@@ -197,7 +199,7 @@ class AiresScheduler(_BaseScheduler):
         m = ScheduleMetrics(scheduler=self.name, dataset=dataset)
 
         # ---- Phase 0: analytical planning (Eq. 5-7), no data touched.
-        mem = plan_memory_spec(a, feat, m_total=self.device_budget)
+        mem = plan_memory_unified(a, feat, m_total=self.device_budget)
         if not mem.feasible:
             m.oom = True
             return ScheduleResult(x=None, metrics=m, mem=mem)
@@ -392,7 +394,7 @@ class MaxMemoryScheduler(_BaseScheduler):
         # spills DtoH; because a hypersparse A spreads each C row's updates
         # across many segments, spilled C blocks are re-fetched when later
         # segments touch them again (thrash ∝ spill count, capped).
-        mem_full = plan_memory_spec(a, feat, m_total=float("inf"))
+        mem_full = plan_memory_unified(a, feat, m_total=float("inf"))
         c_slot = max(half - h_bytes, 1)
         n_spills = max(1, int(np.ceil(mem_full.m_c / c_slot)))
         thrash = min(n_spills, 3)
@@ -463,7 +465,7 @@ class UCGScheduler(_BaseScheduler):
         # UM moves A, H and C on demand. Page-granularity refetch grows as
         # the resident share shrinks: fewer pages stay cached, so evicted
         # pages refault — refetch ∝ working-set / budget.
-        mem_full = plan_memory_spec(a, feat, m_total=float("inf"))
+        mem_full = plan_memory_unified(a, feat, m_total=float("inf"))
         working_set = a.nbytes() + h_bytes + mem_full.m_c
         refetch = self.um_refetch * max(
             1.0, 0.6 * working_set / max(self.device_budget, 1))
@@ -567,7 +569,7 @@ class ETCScheduler(_BaseScheduler):
             io_free = io_done
         # Output paging: C exits via DMA; if the reserved out_alloc is under
         # M_C, the overflow pages out mid-stream as well (no GDS in ETC).
-        mem_full = plan_memory_spec(a, feat, m_total=float("inf"))
+        mem_full = plan_memory_unified(a, feat, m_total=float("inf"))
         tms.transfer(Path.DMA, MemoryTier.DEVICE, MemoryTier.HOST,
                      int(mem_full.m_c), tag="out")
         tms.transfer(Path.STORAGE_HOST, MemoryTier.HOST, MemoryTier.STORAGE,

@@ -17,13 +17,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Literal, Optional, Tuple
+from typing import Callable, Dict, List, Literal, Optional, Tuple, Union
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.memory_model import plan_memory_dense_features
+from repro.core.memory_model import FeatureSpec, plan_memory_unified
 from repro.core.robw import (
     robw_partition,
     robw_transpose_plan,
@@ -36,9 +36,14 @@ from repro.core.scheduler import (
     SCHEDULERS,
 )
 from repro.io.segment_cache import SegmentKey, TieredSegmentCache
+from repro.io.shard_cache import ShardedSegmentCache
 from repro.io.streamer import DoubleBufferedStreamer, StreamStats
 from repro.io.tiers import TierSpec, TPU_V5E_SYSTEM
 from repro.sparse.formats import CSR
+
+# Both tiered caches speak the same get/put protocol; the engine and the
+# epoch runner accept either (mesh-sharded device tier included).
+SegmentCacheLike = Union[TieredSegmentCache, ShardedSegmentCache]
 
 
 @dataclasses.dataclass
@@ -95,7 +100,7 @@ class AiresSpGEMM:
     PREPARED_CACHE_MAX = 8
 
     def __init__(self, config: AiresConfig,
-                 segment_cache: Optional[TieredSegmentCache] = None):
+                 segment_cache: Optional[SegmentCacheLike] = None):
         self.config = config
         # Optional tiered LRU over uploaded BlockELL payloads (shared across
         # engines by the serving layer): repeat streams of the same plan skip
@@ -109,8 +114,8 @@ class AiresSpGEMM:
         self.last_backward_stream_stats: Optional[StreamStats] = None
 
     def plan(self, a: CSR, h_shape) -> tuple:
-        mem = plan_memory_dense_features(
-            a, n_nodes=h_shape[0], feature_dim=h_shape[1],
+        mem = plan_memory_unified(
+            a, FeatureSpec(h_shape[0], h_shape[1], 4, 0.0),
             m_total=self.config.device_budget_bytes)
         if not mem.feasible:
             raise MemoryError(
@@ -183,8 +188,8 @@ class AiresSpGEMM:
             # the Eq. 7 segment budget must be sized for the transposed
             # orientation (they differ whenever A is non-square).
             a_t = self.transpose_of(a)
-            mem = plan_memory_dense_features(
-                a_t, n_nodes=plan_shape[0], feature_dim=plan_shape[1],
+            mem = plan_memory_unified(
+                a_t, FeatureSpec(plan_shape[0], plan_shape[1], 4, 0.0),
                 m_total=cfg.device_budget_bytes)
             if not mem.feasible:
                 raise MemoryError(
@@ -258,13 +263,22 @@ class AiresSpGEMM:
             deadline_s=cfg.straggler_deadline_s,
             payload_nbytes=lambda payload: payload[1].nbytes(),
             cache_lookup=cache_lookup, cache_store=cache_store)
-        promoted0 = cache.stats.promoted_bytes if cache is not None else 0
+        # Copy, not alias: TieredSegmentCache.stats mutates in place.
+        before = (dataclasses.replace(cache.stats)
+                  if cache is not None else None)
         parts = streamer.run_all(list(enumerate(prepared.ells)))
         if cache is not None:
             # Host-tier hits re-crossed the bus via device_put promotions;
             # surface them so uploaded_bytes=0 can't misread as zero traffic.
+            # Likewise inter-chip traffic (sharded cache) and peer-host
+            # serves (cache directory). `cache.stats` may be a recomputed
+            # aggregate (ShardedSegmentCache), so snapshot-and-diff.
+            after = cache.stats
             streamer.stats.promoted_bytes = (
-                cache.stats.promoted_bytes - promoted0)
+                after.promoted_bytes - before.promoted_bytes)
+            streamer.stats.ici_bytes = after.ici_bytes - before.ici_bytes
+            streamer.stats.directory_hit_bytes = (
+                after.directory_hit_bytes - before.directory_hit_bytes)
         out = jnp.concatenate(
             [p[: s.n_rows] for p, s in zip(parts, prepared.segs)], axis=0)
         return out, streamer.stats
@@ -400,7 +414,7 @@ def gcn_epoch(
     dataset: str = "",
     backward_factor: float = 2.0,
     engine_config: Optional[AiresConfig] = None,
-    segment_cache: Optional[TieredSegmentCache] = None,
+    segment_cache: Optional[SegmentCacheLike] = None,
 ) -> EpochMetrics:
     """One training epoch of the Fig. 1 chain under a given scheduler.
 

@@ -7,10 +7,17 @@ from repro.io.tiers import (
     TPU_V5E_SYSTEM,
 )
 from repro.io.streamer import DoubleBufferedStreamer, StreamStats
-from repro.io.segment_cache import CacheStats, SegmentKey, TieredSegmentCache
+from repro.io.segment_cache import (
+    CacheDirectory,
+    CacheStats,
+    SegmentKey,
+    TieredSegmentCache,
+)
+from repro.io.shard_cache import ShardedSegmentCache, shard_of
 
 __all__ = [
     "MemoryTier", "TierSpec", "TieredMemorySystem", "TransferRecord",
     "PAPER_GPU_SYSTEM", "TPU_V5E_SYSTEM", "DoubleBufferedStreamer",
-    "StreamStats", "CacheStats", "SegmentKey", "TieredSegmentCache",
+    "StreamStats", "CacheDirectory", "CacheStats", "SegmentKey",
+    "TieredSegmentCache", "ShardedSegmentCache", "shard_of",
 ]

@@ -47,14 +47,31 @@ class CacheStats:
     demoted_bytes: int = 0   # device->host spills
     promoted_bytes: int = 0  # host->device refills
     evicted_bytes: int = 0   # dropped from the host tier entirely
+    # Sharded device tier (io/shard_cache.py): hits whose brick lives on a
+    # remote shard and the bytes that therefore crossed the ICI path.
+    remote_hits: int = 0
+    ici_bytes: int = 0
+    # Cross-worker directory (CacheDirectory): hits served from a peer
+    # worker's host copy, and demotion copies we skipped because a peer
+    # already holds the brick.
+    directory_hits: int = 0
+    directory_hit_bytes: int = 0
+    duplicate_avoided_bytes: int = 0
 
     @property
     def hits(self) -> int:
-        return self.device_hits + self.host_hits
+        return self.device_hits + self.host_hits + self.directory_hits
 
     def hit_rate(self) -> float:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
+
+    def add(self, other: "CacheStats") -> "CacheStats":
+        """Field-wise sum (aggregating per-shard stats)."""
+        for f in dataclasses.fields(CacheStats):
+            setattr(self, f.name,
+                    getattr(self, f.name) + getattr(other, f.name))
+        return self
 
 
 @dataclasses.dataclass
@@ -81,6 +98,89 @@ def promote_to_device(value: Any):
     return jax.tree_util.tree_map(
         lambda leaf: jax.device_put(leaf) if isinstance(leaf, np.ndarray)
         else leaf, value)
+
+
+class CacheDirectory:
+    """Cross-worker registry of demoted host copies.
+
+    Replicated `ServingEngine` workers each run their own segment cache over
+    the same graphs, so without coordination every worker demotes — and
+    stores — its own host copy of every evicted brick. A shared directory
+    fixes both halves of that waste:
+
+      * **dedup on demote** — a worker about to spill a brick first asks who
+        already holds its host copy; if a *peer* does, the local copy is
+        dropped without the DtoH transfer (counted in the worker's
+        `stats.duplicate_avoided_bytes`).
+      * **fetch on miss** — a worker that misses both its tiers asks the
+        directory; a peer's host copy is promoted straight into the local
+        device tier (one HtoD transfer, tag ``cache/peer-promote``) instead
+        of a fresh wire upload (`stats.directory_hits` /
+        `stats.directory_hit_bytes`).
+
+    One holder per key (first demoter wins); the holder unpublishes when its
+    host copy is promoted away, evicted, or invalidated. Thread-safe; cache
+    locks are never held while a peer cache's lock is taken (the directory
+    stores the host value itself), so workers cannot deadlock.
+    """
+
+    def __init__(self):
+        self._entries: Dict[SegmentKey, Tuple[Hashable, Any, int]] = {}
+        self._claimed: set = set()
+        self._lock = threading.Lock()
+        self.lookups = 0
+        self.hits = 0
+        self.hit_bytes = 0
+        self.duplicates_avoided = 0
+        self.duplicate_avoided_bytes = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def claim_worker(self, worker_id: Hashable) -> None:
+        """Register one *worker* identity (a ServingEngine replica; the
+        shards of one worker's cache legitimately share its id). Two
+        workers claiming the same id would silently neutralize the
+        directory — fetch excludes the caller's own id and demote-dedup
+        only trusts *other* holders — so a duplicate claim is an error."""
+        with self._lock:
+            if worker_id in self._claimed:
+                raise ValueError(
+                    f"worker_id {worker_id!r} already claimed on this "
+                    "CacheDirectory — replicated workers need distinct "
+                    "EngineConfig.worker_id values, or the directory "
+                    "silently never dedups or peer-serves")
+            self._claimed.add(worker_id)
+
+    def holder(self, key: SegmentKey) -> Optional[Hashable]:
+        with self._lock:
+            entry = self._entries.get(key)
+            return entry[0] if entry is not None else None
+
+    def publish(self, key: SegmentKey, worker_id: Hashable, value: Any,
+                nbytes: int) -> None:
+        """Record `worker_id` as the holder of `key`'s host copy."""
+        with self._lock:
+            self._entries[key] = (worker_id, value, int(nbytes))
+
+    def unpublish(self, key: SegmentKey, worker_id: Hashable) -> None:
+        """Drop the record — only if `worker_id` is still the holder."""
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None and entry[0] == worker_id:
+                del self._entries[key]
+
+    def fetch(self, key: SegmentKey,
+              exclude: Hashable = None) -> Optional[Tuple[Any, Hashable, int]]:
+        """(host value, holder, nbytes) if a worker ≠ `exclude` holds it."""
+        with self._lock:
+            self.lookups += 1
+            entry = self._entries.get(key)
+            if entry is None or entry[0] == exclude:
+                return None
+            self.hits += 1
+            self.hit_bytes += entry[2]
+            return entry[1], entry[0], entry[2]
 
 
 class TieredSegmentCache:
@@ -111,6 +211,8 @@ class TieredSegmentCache:
         tms: Optional[TieredMemorySystem] = None,
         demote: Callable[[Any], Any] = demote_to_host,
         promote: Callable[[Any], Any] = promote_to_device,
+        directory: Optional[CacheDirectory] = None,
+        worker_id: Hashable = 0,
     ):
         if device_budget_bytes <= 0:
             raise ValueError("device_budget_bytes must be > 0")
@@ -118,6 +220,10 @@ class TieredSegmentCache:
         self.host_budget_bytes = (None if host_budget_bytes is None
                                   else int(host_budget_bytes))
         self.tms = tms
+        # Optional cross-worker directory (replicated serving): dedups
+        # demotion copies and serves misses from a peer's host tier.
+        self.directory = directory
+        self.worker_id = worker_id
         self._demote = demote
         self._promote = promote
         self._device: "OrderedDict[SegmentKey, _Entry]" = OrderedDict()
@@ -178,6 +284,8 @@ class TieredSegmentCache:
                             or str(k.graph_id).startswith(prefix)]:
                     dropped += 1
                     self._account(store, -store.pop(key).nbytes)
+                    if store is self._host and self.directory is not None:
+                        self.directory.unpublish(key, self.worker_id)
             for gid in [g for g in self._pins
                         if g == exact or str(g).startswith(prefix)]:
                 del self._pins[gid]
@@ -185,6 +293,9 @@ class TieredSegmentCache:
 
     def clear(self) -> None:
         with self._lock:
+            if self.directory is not None:
+                for key in self._host:
+                    self.directory.unpublish(key, self.worker_id)
             self._device.clear()
             self._host.clear()
             self._device_used = 0
@@ -216,6 +327,9 @@ class TieredSegmentCache:
             entry = self._host.pop(key, None)
             if entry is not None:
                 self._host_used -= entry.nbytes
+                if self.directory is not None:
+                    # Our host copy is consumed by the promotion.
+                    self.directory.unpublish(key, self.worker_id)
                 value = self._promote(entry.value)
                 cost = self._charge(
                     tms, MemoryTier.HOST, MemoryTier.DEVICE, entry.nbytes,
@@ -226,6 +340,25 @@ class TieredSegmentCache:
                 self.stats.hit_bytes += nbytes
                 self._insert_device(key, _Entry(value, entry.nbytes), tms)
                 return value, cost
+            if self.directory is not None:
+                fetched = self.directory.fetch(key, exclude=self.worker_id)
+                if fetched is not None:
+                    # A peer worker's host tier holds the brick: promote its
+                    # copy into our device tier — one HtoD transfer instead
+                    # of a fresh wire upload. The peer keeps its host copy
+                    # (and stays the directory holder).
+                    host_value, _, host_nbytes = fetched
+                    value = self._promote(host_value)
+                    cost = self._charge(
+                        tms, MemoryTier.HOST, MemoryTier.DEVICE, host_nbytes,
+                        "cache/peer-promote")
+                    self.last_get_transfer_s = cost
+                    self.stats.promoted_bytes += host_nbytes
+                    self.stats.directory_hits += 1
+                    self.stats.directory_hit_bytes += nbytes
+                    self.stats.hit_bytes += nbytes
+                    self._insert_device(key, _Entry(value, host_nbytes), tms)
+                    return value, cost
             self.stats.misses += 1
             self.stats.miss_bytes += nbytes
             return None, 0.0
@@ -243,6 +376,8 @@ class TieredSegmentCache:
             stale = self._host.pop(key, None)
             if stale is not None:
                 self._host_used -= stale.nbytes
+                if self.directory is not None:
+                    self.directory.unpublish(key, self.worker_id)
             self._insert_device(key, _Entry(value, int(nbytes)), tms)
 
     def _account(self, store, delta: int) -> None:
@@ -276,6 +411,16 @@ class TieredSegmentCache:
     def _demote_entry(self, key: SegmentKey, entry: _Entry,
                       tms: Optional[TieredMemorySystem]) -> None:
         """Move a device-form entry down a tier (or drop it if it can't fit)."""
+        if self.directory is not None:
+            holder = self.directory.holder(key)
+            if holder is not None and holder != self.worker_id:
+                # A peer already keeps this brick's host copy: drop ours
+                # without the DtoH transfer — the brick stays recoverable
+                # via the directory (fetch-on-miss path).
+                self.stats.duplicate_avoided_bytes += entry.nbytes
+                self.directory.duplicates_avoided += 1
+                self.directory.duplicate_avoided_bytes += entry.nbytes
+                return
         if self.host_budget_bytes is not None \
                 and entry.nbytes > self.host_budget_bytes:
             self.stats.evicted_bytes += entry.nbytes
@@ -286,8 +431,13 @@ class TieredSegmentCache:
         entry = _Entry(self._demote(entry.value), entry.nbytes)
         if self.host_budget_bytes is not None:
             while self._host_used + entry.nbytes > self.host_budget_bytes:
-                _, dropped = self._host.popitem(last=False)
+                victim_key, dropped = self._host.popitem(last=False)
                 self._host_used -= dropped.nbytes
                 self.stats.evicted_bytes += dropped.nbytes
+                if self.directory is not None:
+                    self.directory.unpublish(victim_key, self.worker_id)
         self._host[key] = entry
         self._host_used += entry.nbytes
+        if self.directory is not None:
+            self.directory.publish(key, self.worker_id, entry.value,
+                                   entry.nbytes)

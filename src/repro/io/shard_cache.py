@@ -1,0 +1,256 @@
+"""Mesh-sharded device tier for the segment cache.
+
+`TieredSegmentCache` models one chip's tiered memory. Production serving
+runs a *mesh* of chips (launch/mesh.py), and replicating the cache per chip
+wastes the aggregate HBM: every chip retains — and re-demotes — its own
+copy of every brick. `ShardedSegmentCache` instead partitions the device
+tier across a named mesh axis, in the spirit of batched/partitioned SpGEMM
+scheduling (arXiv:1903.11409) and Accel-GCN's workload-balanced block
+mapping (arXiv:2308.11825):
+
+  * every `SegmentKey` has one deterministic **owner shard**
+    (`shard_of(key)`, a stable CRC over the key — NOT Python's randomized
+    `hash`), so a brick is retained exactly once across the mesh;
+  * per-shard device budgets and LRU state are **independent** — one hot
+    graph cannot evict another graph's bricks from a different shard;
+  * a hit whose owner is a **remote** shard ships the brick over the ICI
+    path (`Path.ICI`, cheaper than the PCIe-class `dma`/`sio` paths,
+    dearer than local HBM) — charged through the `TieredMemorySystem` so
+    simulate-mode `bytes_by_path` stays honest, and executed for real
+    (`jax.device_put` onto the local chip) when the cache is built from a
+    mesh with >1 actual devices;
+  * host spill, promotion, and the cross-worker `CacheDirectory` all ride
+    the per-shard `TieredSegmentCache`s unchanged.
+
+A 1-shard cache is byte-identical to a bare `TieredSegmentCache` (asserted
+in tests/test_shard_cache.py): shard 0 is local, so no ICI transfer is ever
+charged and every call delegates straight through.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Any, Callable, Hashable, List, Optional, Sequence
+
+from repro.io.segment_cache import (
+    CacheDirectory,
+    CacheStats,
+    SegmentKey,
+    TieredSegmentCache,
+    demote_to_host,
+    promote_to_device,
+)
+from repro.io.tiers import MemoryTier, Path, TieredMemorySystem
+
+
+def shard_of(key: SegmentKey, n_shards: int) -> int:
+    """Deterministic owner shard of a segment key.
+
+    CRC32 over the key's repr: stable within a process (unlike `hash()`,
+    which is salted per interpreter for str fields), uniform enough to
+    balance bricks across shards, and identical for replicated workers
+    looking at the same key.
+    """
+    if n_shards <= 1:
+        return 0
+    blob = repr((key.graph_id, key.segment_id, key.wire_format,
+                 key.shape)).encode()
+    return zlib.crc32(blob) % n_shards
+
+
+def _place(value: Any, device) -> Any:
+    """Commit a cached value's jax arrays to `device` (the ICI hop made
+    real); non-array leaves (metadata, host mirrors) pass through."""
+    if device is None:
+        return value
+    import jax
+
+    return jax.tree_util.tree_map(
+        lambda leaf: jax.device_put(leaf, device)
+        if isinstance(leaf, jax.Array) else leaf, value)
+
+
+class ShardedSegmentCache:
+    """Device tier partitioned over a mesh axis; drop-in for
+    `TieredSegmentCache` behind the `cache_lookup`/`cache_store` hooks.
+
+    `device_budget_bytes` is the *aggregate* device budget; each of the
+    `n_shards` shards gets an independent `device_budget_bytes // n_shards`
+    slice (same for the host budget). `local_shard` is the shard this
+    worker's streaming pipeline runs on: hits owned by any other shard are
+    charged `nbytes` over `Path.ICI` (tag ``cache/ici``), and a remote put
+    ships the fresh brick to its owner (tag ``cache/shard-place``).
+
+    Build from a mesh with `from_mesh(mesh, axis=...)` to derive `n_shards`
+    from the axis size and pin each shard's entries to a real device along
+    that axis — with `XLA_FLAGS=--xla_force_host_platform_device_count=8`
+    the bricks genuinely live on distinct (CPU) devices and remote hits
+    really cross device boundaries.
+    """
+
+    def __init__(
+        self,
+        device_budget_bytes: int,
+        host_budget_bytes: Optional[int] = None,
+        tms: Optional[TieredMemorySystem] = None,
+        n_shards: int = 1,
+        local_shard: int = 0,
+        devices: Optional[Sequence] = None,
+        directory: Optional[CacheDirectory] = None,
+        worker_id: Hashable = 0,
+        demote: Callable[[Any], Any] = demote_to_host,
+        promote: Callable[[Any], Any] = promote_to_device,
+    ):
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        if not 0 <= local_shard < n_shards:
+            raise ValueError(f"local_shard {local_shard} outside "
+                             f"[0, {n_shards})")
+        if device_budget_bytes < n_shards:
+            raise ValueError(
+                f"device_budget_bytes {device_budget_bytes} < n_shards "
+                f"{n_shards}: every shard needs a positive budget")
+        if devices is not None and len(devices) != n_shards:
+            raise ValueError(f"devices ({len(devices)}) must match "
+                             f"n_shards ({n_shards})")
+        self.n_shards = int(n_shards)
+        self.local_shard = int(local_shard)
+        self.devices = list(devices) if devices is not None else None
+        self.device_budget_bytes = int(device_budget_bytes)
+        self.host_budget_bytes = (None if host_budget_bytes is None
+                                  else int(host_budget_bytes))
+        self.tms = tms
+        self.directory = directory
+        self.worker_id = worker_id
+        per_dev = self.device_budget_bytes // self.n_shards
+        per_host = self.host_budget_bytes
+        if per_host is not None and self.n_shards > 1:
+            per_host = max(1, per_host // self.n_shards)
+        self.shards: List[TieredSegmentCache] = []
+        for s in range(self.n_shards):
+            dev = self.devices[s] if self.devices is not None else None
+            shard_promote = (promote if dev is None
+                             else (lambda v, d=dev: _place(promote(v), d)))
+            self.shards.append(TieredSegmentCache(
+                per_dev, per_host, tms=tms, demote=demote,
+                promote=shard_promote, directory=directory,
+                worker_id=worker_id))
+        # Remote-hit accounting lives here (the shards know nothing about
+        # the mesh); the aggregate `stats` property folds it in.
+        self._remote_hits = 0
+        self._ici_bytes = 0
+        self.last_get_transfer_s: float = 0.0
+
+    @classmethod
+    def from_mesh(cls, mesh, device_budget_bytes: int, axis: str = "cache",
+                  local_index: int = 0, **kw) -> "ShardedSegmentCache":
+        """Partition over `mesh`'s `axis`: one shard per index, each pinned
+        to the first device at that index (the owner chip)."""
+        import numpy as np
+
+        names = list(mesh.axis_names)
+        if axis not in names:
+            raise ValueError(f"mesh has no axis {axis!r} (has {names})")
+        ax = names.index(axis)
+        n_shards = mesh.devices.shape[ax]
+        # Owner chip per shard index: first device of each slice along axis.
+        dev_grid = np.moveaxis(np.asarray(mesh.devices), ax, 0)
+        dev_grid = dev_grid.reshape(n_shards, -1)
+        devices = [dev_grid[s, 0] for s in range(n_shards)]
+        return cls(device_budget_bytes, n_shards=n_shards,
+                   local_shard=local_index, devices=devices, **kw)
+
+    # ---- introspection ---------------------------------------------------
+
+    @property
+    def stats(self) -> CacheStats:
+        """Aggregate across shards (recomputed per access — read deltas of
+        this, do not mutate it)."""
+        agg = CacheStats()
+        for shard in self.shards:
+            agg.add(shard.stats)
+        agg.remote_hits += self._remote_hits
+        agg.ici_bytes += self._ici_bytes
+        return agg
+
+    @property
+    def device_used_bytes(self) -> int:
+        return sum(s.device_used_bytes for s in self.shards)
+
+    @property
+    def host_used_bytes(self) -> int:
+        return sum(s.host_used_bytes for s in self.shards)
+
+    def __len__(self) -> int:
+        return sum(len(s) for s in self.shards)
+
+    def __contains__(self, key: SegmentKey) -> bool:
+        return key in self._owner(key)
+
+    def tier_of(self, key: SegmentKey) -> Optional[MemoryTier]:
+        return self._owner(key).tier_of(key)
+
+    def shard_index_of(self, key: SegmentKey) -> int:
+        return shard_of(key, self.n_shards)
+
+    def _owner(self, key: SegmentKey) -> TieredSegmentCache:
+        return self.shards[shard_of(key, self.n_shards)]
+
+    # ---- maintenance -----------------------------------------------------
+
+    def pin(self, graph_id: Hashable, obj: Any) -> None:
+        for shard in self.shards:
+            shard.pin(graph_id, obj)
+
+    def invalidate_graph(self, graph_id: Hashable) -> int:
+        return sum(s.invalidate_graph(graph_id) for s in self.shards)
+
+    def invalidate_prefix(self, prefix: str, exact: Hashable = None) -> int:
+        return sum(s.invalidate_prefix(prefix, exact=exact)
+                   for s in self.shards)
+
+    def clear(self) -> None:
+        for shard in self.shards:
+            shard.clear()
+
+    # ---- the cache protocol ----------------------------------------------
+
+    def get(self, key: SegmentKey, nbytes: int = 0,
+            tms: Optional[TieredMemorySystem] = None) -> Optional[Any]:
+        return self.get_with_cost(key, nbytes=nbytes, tms=tms)[0]
+
+    def get_with_cost(self, key: SegmentKey, nbytes: int = 0,
+                      tms: Optional[TieredMemorySystem] = None):
+        """(value, transfer_seconds). A remote-shard hit adds the ICI hop to
+        the owner shard's own promotion cost (if any)."""
+        s = shard_of(key, self.n_shards)
+        value, cost = self.shards[s].get_with_cost(key, nbytes=nbytes,
+                                                   tms=tms)
+        if value is not None and s != self.local_shard:
+            self._remote_hits += 1
+            self._ici_bytes += nbytes
+            cost += self._charge_ici(tms, nbytes, "cache/ici")
+            if self.devices is not None:
+                value = _place(value, self.devices[self.local_shard])
+        self.last_get_transfer_s = cost
+        return value, cost
+
+    def put(self, key: SegmentKey, value: Any, nbytes: int,
+            tms: Optional[TieredMemorySystem] = None,
+            pin: Any = None) -> None:
+        """Insert at the owner shard; a remote owner costs one ICI ship of
+        the fresh brick (the upload landed on the local chip first)."""
+        s = shard_of(key, self.n_shards)
+        if s != self.local_shard:
+            self._ici_bytes += nbytes
+            self._charge_ici(tms, nbytes, "cache/shard-place")
+            if self.devices is not None:
+                value = _place(value, self.devices[s])
+        self.shards[s].put(key, value, nbytes, tms=tms, pin=pin)
+
+    def _charge_ici(self, tms: Optional[TieredMemorySystem], nbytes: int,
+                    tag: str) -> float:
+        tms = tms if tms is not None else self.tms
+        if tms is None or nbytes <= 0:
+            return 0.0
+        return tms.transfer(Path.ICI, MemoryTier.DEVICE, MemoryTier.DEVICE,
+                            int(nbytes), tag=tag)

@@ -28,6 +28,11 @@ class StreamStats:
     promoted_bytes: int = 0        # of those, host-tier promotions that DID
     #                                re-cross the bus (true bus traffic is
     #                                uploaded_bytes + promoted_bytes)
+    ici_bytes: int = 0             # sharded cache: bytes that crossed the
+    #                                inter-chip path (remote-shard hits and
+    #                                shard placements) during this stream
+    directory_hit_bytes: int = 0   # wire bytes served from a peer worker's
+    #                                host copy via the CacheDirectory
 
 
 class DoubleBufferedStreamer:

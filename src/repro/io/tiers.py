@@ -63,10 +63,14 @@ def _mk(caps, bw_gbs, lat_us, hbm_bw, host_bw=12e9) -> TierSpec:
 
 
 # RTX 4090 (24 GB, 1008 GB/s) + i9-13900KF (128 GB DDR5) + M.2 NVMe, PCIe gen4.
+# ICI here models an NVLink-class peer path for the sharded segment cache:
+# cheaper than the PCIe-class DMA/host paths, dearer than local HBM.
 PAPER_GPU_SYSTEM = _mk(
     (24 << 30, 128 << 30, 2 << 40),
-    {Path.DMA: 22.0, Path.GDS: 6.0, Path.STORAGE_HOST: 6.5, Path.UM: 9.0},
-    {Path.DMA: 8.0, Path.GDS: 25.0, Path.STORAGE_HOST: 20.0, Path.UM: 4.0},
+    {Path.DMA: 22.0, Path.GDS: 6.0, Path.STORAGE_HOST: 6.5, Path.UM: 9.0,
+     Path.ICI: 100.0},
+    {Path.DMA: 8.0, Path.GDS: 25.0, Path.STORAGE_HOST: 20.0, Path.UM: 4.0,
+     Path.ICI: 2.0},
     hbm_bw=1008e9,
 )
 

@@ -24,3 +24,21 @@ def data_axes(mesh) -> tuple:
 
 def model_axis(mesh) -> str:
     return "model"
+
+
+def make_cache_mesh(n_shards: int, axis: str = "cache"):
+    """1-D mesh for the sharded segment cache's device tier.
+
+    Uses the first `n_shards` local devices; on a CPU container run with
+    `XLA_FLAGS=--xla_force_host_platform_device_count=8` these are real
+    distinct devices, so remote-shard hits genuinely cross device
+    boundaries (tests/test_shard_cache.py exercises this).
+    """
+    import jax
+
+    if n_shards > jax.device_count():
+        raise ValueError(
+            f"n_shards {n_shards} > available devices {jax.device_count()} "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count=N on CPU)")
+    return jax.make_mesh((n_shards,), (axis,),
+                         devices=jax.devices()[:n_shards])

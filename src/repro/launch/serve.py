@@ -50,12 +50,24 @@ def serve(cfg, params, prompts: np.ndarray, steps: int = 8):
 
 
 def serve_gcn(scale: float = 1e-4, batch: int = 4, epochs: int = 2,
-              cache: bool = True, feature_dim: int = 16, seed: int = 0):
-    """Drive the multi-graph GCN serving engine; returns per-epoch reports."""
+              cache: bool = True, feature_dim: int = 16, seed: int = 0,
+              cache_shards: int = 1, workers: int = 1):
+    """Drive the multi-graph GCN serving engine; returns per-epoch reports.
+
+    `cache_shards > 1` partitions each worker's cache device tier across
+    shards (remote hits ride ICI); `workers > 1` runs replicated engines
+    against the same graphs with a shared `CacheDirectory`, so one worker's
+    demoted bricks serve the others' misses. With one worker the reports
+    are a flat per-epoch list (back-compat); with several, a list of
+    per-epoch lists, one report per worker.
+    """
     from repro.data import (
         SUITESPARSE_SPECS, generate_graph, normalized_adjacency, scaled_spec,
     )
+    from repro.io import CacheDirectory
     from repro.runtime import EngineConfig, InferenceRequest, ServingEngine
+
+    from repro.core import plan_memory_dense_features
 
     rng = np.random.default_rng(seed)
     graphs = {
@@ -63,23 +75,37 @@ def serve_gcn(scale: float = 1e-4, batch: int = 4, epochs: int = 2,
             scaled_spec(SUITESPARSE_SPECS[name], scale), seed=i))
         for i, name in enumerate(("socLJ1", "rUSA"))
     }
-    budget = max(int((a.nbytes() + 2 * a.n_rows * 64 * 4) * 0.6)
-                 for a in graphs.values())
-    eng = ServingEngine(EngineConfig(device_budget_bytes=budget,
-                                     cache_enabled=cache))
-    for name, a in graphs.items():
-        eng.register_graph(name, a)
+    # Feasible for the engine's pinned plan width (64), small enough that
+    # streaming still splits into several segments per graph.
+    budget = max(
+        int(est.m_b + est.m_c + 0.6 * a.nbytes())
+        for a in graphs.values()
+        for est in [plan_memory_dense_features(a, a.n_rows, 64,
+                                               float("inf"))])
+    directory = CacheDirectory() if workers > 1 else None
+    engines = []
+    for wid in range(workers):
+        eng = ServingEngine(
+            EngineConfig(device_budget_bytes=budget, cache_enabled=cache,
+                         cache_shards=cache_shards, worker_id=wid),
+            directory=directory)
+        for name, a in graphs.items():
+            eng.register_graph(name, a)
+        engines.append(eng)
 
     reports = []
     for _ in range(epochs):
-        for name, a in graphs.items():
-            for _ in range(batch):
-                h = rng.standard_normal(
-                    (a.n_rows, feature_dim)).astype(np.float32)
-                w = [rng.standard_normal(
-                    (feature_dim, feature_dim)).astype(np.float32)]
-                eng.submit(InferenceRequest(name, h, w))
-        reports.append(eng.run_batch())
+        epoch_reports = []
+        for eng in engines:
+            for name, a in graphs.items():
+                for _ in range(batch):
+                    h = rng.standard_normal(
+                        (a.n_rows, feature_dim)).astype(np.float32)
+                    w = [rng.standard_normal(
+                        (feature_dim, feature_dim)).astype(np.float32)]
+                    eng.submit(InferenceRequest(name, h, w))
+            epoch_reports.append(eng.run_batch())
+        reports.append(epoch_reports[0] if workers == 1 else epoch_reports)
     return reports
 
 
@@ -93,18 +119,30 @@ def main(argv=None) -> None:
     ap.add_argument("--epochs", type=int, default=2)
     ap.add_argument("--no-cache", action="store_true",
                     help="gcn mode: disable the tiered segment cache")
+    ap.add_argument("--cache-shards", type=int, default=1,
+                    help="gcn mode: partition the cache device tier over "
+                         "this many mesh shards (remote hits ride ICI)")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="gcn mode: replicated serving workers sharing a "
+                         "CacheDirectory (dedups demotion copies)")
     args = ap.parse_args(argv)
 
     if args.mode == "gcn":
         reports = serve_gcn(batch=args.batch, epochs=args.epochs,
-                            cache=not args.no_cache)
+                            cache=not args.no_cache,
+                            cache_shards=args.cache_shards,
+                            workers=args.workers)
         for e, rep in enumerate(reports):
-            print(f"epoch {e}: {len(rep.results)} requests, "
-                  f"{rep.aggregation_passes} streamed passes, "
-                  f"uploaded {rep.uploaded_bytes} B, "
-                  f"cache-hit {rep.cache_hit_bytes} B "
-                  f"(promoted {rep.promoted_bytes} B, "
-                  f"hit rate {rep.hit_rate:.0%}) in {rep.wall_seconds:.2f}s")
+            for wid, r in enumerate(rep if isinstance(rep, list) else [rep]):
+                print(f"epoch {e} worker {wid}: {len(r.results)} requests, "
+                      f"{r.aggregation_passes} streamed passes, "
+                      f"uploaded {r.uploaded_bytes} B, "
+                      f"cache-hit {r.cache_hit_bytes} B "
+                      f"(promoted {r.promoted_bytes} B, "
+                      f"ici {r.ici_bytes} B, "
+                      f"peer-served {r.directory_hit_bytes} B, "
+                      f"dup-avoided {r.duplicate_avoided_bytes} B, "
+                      f"hit rate {r.hit_rate:.0%}) in {r.wall_seconds:.2f}s")
         return
 
     if args.arch is None:

@@ -35,7 +35,12 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.spgemm import AiresConfig, AiresSpGEMM
-from repro.io.segment_cache import CacheStats, TieredSegmentCache
+from repro.io.segment_cache import (
+    CacheDirectory,
+    CacheStats,
+    TieredSegmentCache,
+)
+from repro.io.shard_cache import ShardedSegmentCache
 from repro.sparse.formats import CSR
 
 
@@ -50,6 +55,15 @@ class EngineConfig:
     # host to 8× that; None host budget = unbounded spill.
     cache_device_bytes: Optional[int] = None
     cache_host_bytes: Optional[int] = None
+    # Sharded device tier (io/shard_cache.py): >1 partitions the cache's
+    # device budget over `cache_shards` independent LRU shards, remote hits
+    # riding the ICI path. 1 (default) keeps the PR-2 single-chip cache —
+    # byte-identical accounting. A mesh passed to ServingEngine overrides
+    # this with the size of `cache_shard_axis`.
+    cache_shards: int = 1
+    cache_shard_axis: str = "cache"
+    # Identity of this replicated worker in a shared CacheDirectory.
+    worker_id: int = 0
     # Planning width: one plan serves all request/layer widths up to this,
     # and batches are chunked so concatenated width never exceeds it.
     max_batch_features: int = 64
@@ -89,6 +103,14 @@ class BatchReport:
     segments_streamed: int    # consume() invocations (incl. cache hits)
     aggregation_passes: int   # streamed SpGEMM passes (batching merges these)
     wall_seconds: float = 0.0
+    # Sharded cache: bytes that crossed the inter-chip path this batch
+    # (remote-shard hits + shard placements). 0 for a 1-shard cache.
+    ici_bytes: int = 0
+    # Cross-worker directory: wire bytes served from a peer worker's host
+    # copy, and demotion copies this worker skipped because a peer already
+    # holds the brick. 0 with no directory attached.
+    directory_hit_bytes: int = 0
+    duplicate_avoided_bytes: int = 0
 
     @property
     def bus_bytes(self) -> int:
@@ -112,17 +134,49 @@ class ServingEngine:
 
     With `cache_enabled=False` every batch re-streams every segment — bit
     for bit the PR-1 `AiresSpGEMM` behavior (the ablation baseline).
+
+    Scale-out: `config.cache_shards > 1` (or a `mesh` argument) partitions
+    the cache's device tier across a mesh axis (`ShardedSegmentCache`), and
+    a shared `CacheDirectory` lets replicated workers serve each other's
+    demoted bricks instead of duplicating them — see README "Sharded
+    serving". Both default off, reproducing PR-2 byte accounting exactly.
     """
 
-    def __init__(self, config: EngineConfig):
+    def __init__(self, config: EngineConfig,
+                 directory: Optional[CacheDirectory] = None,
+                 mesh=None):
         self.config = config
-        self.cache: Optional[TieredSegmentCache] = None
+        self.directory = directory
+        self.cache: Optional["TieredSegmentCache | ShardedSegmentCache"] = None
+        if not config.cache_enabled and (directory is not None
+                                         or mesh is not None):
+            raise ValueError(
+                "cache_enabled=False contradicts an explicit "
+                f"{'directory' if directory is not None else 'mesh'}: "
+                "the sharded tier and the cross-worker directory are "
+                "cache features")
+        if directory is not None:
+            # Distinct replica identities, or the directory silently no-ops.
+            directory.claim_worker(config.worker_id)
         if config.cache_enabled:
             device_bytes = (config.cache_device_bytes
                             or config.device_budget_bytes)
-            self.cache = TieredSegmentCache(
-                device_budget_bytes=device_bytes,
-                host_budget_bytes=config.cache_host_bytes)
+            if mesh is not None:
+                self.cache = ShardedSegmentCache.from_mesh(
+                    mesh, device_bytes, axis=config.cache_shard_axis,
+                    host_budget_bytes=config.cache_host_bytes,
+                    directory=directory, worker_id=config.worker_id)
+            elif config.cache_shards > 1:
+                self.cache = ShardedSegmentCache(
+                    device_budget_bytes=device_bytes,
+                    host_budget_bytes=config.cache_host_bytes,
+                    n_shards=config.cache_shards,
+                    directory=directory, worker_id=config.worker_id)
+            else:
+                self.cache = TieredSegmentCache(
+                    device_budget_bytes=device_bytes,
+                    host_budget_bytes=config.cache_host_bytes,
+                    directory=directory, worker_id=config.worker_id)
         self._graphs: "OrderedDict[str, CSR]" = OrderedDict()
         self._engines: Dict[str, AiresSpGEMM] = {}
         self._queue: List[InferenceRequest] = []
@@ -207,7 +261,11 @@ class ServingEngine:
             self._queue = queue + self._queue  # nothing consumed
             raise KeyError(
                 f"queued requests reference unregistered graphs {unknown}")
-        promoted = 0
+        promoted = ici = dir_hits = 0
+        # Duplicate-avoided demotions happen inside put()/evictions, outside
+        # any stream's stats window — diff the cache's cumulative counter.
+        dup0 = (self.cache.stats.duplicate_avoided_bytes
+                if self.cache is not None else 0)
         for name in self._graphs:  # registration order, deterministic
             group = [r for r in queue if r.graph == name]
             if not group:
@@ -219,14 +277,20 @@ class ServingEngine:
                 uploaded += stats.uploaded_bytes
                 hits += stats.cache_hit_bytes
                 promoted += stats.promoted_bytes
+                ici += stats.ici_bytes
+                dir_hits += stats.directory_hit_bytes
                 segments += stats.segments
                 passes += 1
         results.sort(key=lambda r: r.request_id)
+        dup = ((self.cache.stats.duplicate_avoided_bytes - dup0)
+               if self.cache is not None else 0)
         return BatchReport(
             results=results, uploaded_bytes=uploaded, cache_hit_bytes=hits,
             promoted_bytes=promoted, segments_streamed=segments,
             aggregation_passes=passes,
-            wall_seconds=time.perf_counter() - t0)
+            wall_seconds=time.perf_counter() - t0,
+            ici_bytes=ici, directory_hit_bytes=dir_hits,
+            duplicate_avoided_bytes=dup)
 
     def _run_graph_group(self, name: str,
                          group: List[InferenceRequest]) -> List[InferenceResult]:

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from repro.core import (
     AiresConfig, AiresSpGEMM, SCHEDULERS, plan_memory_dense_features,
 )
-from repro.io import TieredSegmentCache
+from repro.io import CacheDirectory, ShardedSegmentCache, TieredSegmentCache
 from repro.io.tiers import PAPER_GPU_SYSTEM
 from repro.runtime import EngineConfig, InferenceRequest, ServingEngine
 from repro.sparse.ref_spgemm import spgemm_csr_dense
@@ -264,13 +264,11 @@ def test_simulate_bytes_by_path_matches_execute_uploaded_bytes(
     engine(a, jnp.asarray(h))
     real = engine.last_stream_stats
 
-    # Hand the scheduler a budget that yields the same Eq. 7 segment budget
-    # m_a as the engine's plan (the two planners read Eq. 5 differently for
-    # dense features; equal m_a ⇒ identical RoBW partitions).
-    from repro.core import FeatureSpec, plan_memory_spec
-    eng_mem = plan_memory_dense_features(a, a.n_rows, f, budget)
-    spec_mem = plan_memory_spec(a, FeatureSpec.of(h), float("inf"))
-    sched_budget = int(3 * eng_mem.p + spec_mem.m_b + spec_mem.m_c)
+    # Same budget on both sides: the unified Eq. 5 planner gives the
+    # scheduler and the engine identical MemoryEstimates for dense features,
+    # hence identical RoBW partitions — the pre-unification equal-m_a
+    # scaffolding is gone.
+    sched_budget = budget
     sched = SCHEDULERS["aires"](PAPER_GPU_SYSTEM, device_budget=sched_budget,
                                 wire_format="bricks", bm=8, bk=8)
     res = sched.run(a, h, mode="simulate")
@@ -303,6 +301,148 @@ def test_simulate_bytes_by_path_matches_execute_uploaded_bytes(
     assert cached_engine.last_stream_stats.uploaded_bytes == 0
     assert (cached_engine.last_stream_stats.cache_hit_bytes
             == real.uploaded_bytes)
+
+
+# ---- sharded serving (ISSUE 3 tentpole) ----------------------------------
+
+def _wire_total(a, h):
+    """Total wire bytes of one streamed pass at h's width (probe run)."""
+    probe = _engine(a)
+    probe.register_graph("lj", a)
+    probe.infer("lj", h)
+    return probe.cache_stats().hit_bytes + probe.cache_stats().miss_bytes
+
+
+def test_sharded_two_worker_warm_epoch_acceptance(quickstart_graph):
+    """The ISSUE acceptance scenario: 4 cache shards, two replicated
+    workers sharing a CacheDirectory, device tier too small for the plan.
+    Warm epoch: zero wire uploads, promoted/remote bytes ride ICI, and the
+    directory spares at least one duplicate demotion copy."""
+    rng = np.random.default_rng(11)
+    a = quickstart_graph
+    h = rng.standard_normal((a.n_rows, 32)).astype(np.float32)
+    w = [rng.standard_normal((32, 16)).astype(np.float32)]
+    ref = _reference_chain(a, h, w)
+    wire_total = _wire_total(a, h)
+
+    directory = CacheDirectory()
+    workers = [
+        ServingEngine(
+            EngineConfig(device_budget_bytes=_budget(a),
+                         cache_device_bytes=max(4, wire_total // 2),
+                         cache_shards=4, worker_id=wid),
+            directory=directory)
+        for wid in (0, 1)
+    ]
+    for eng in workers:
+        assert isinstance(eng.cache, ShardedSegmentCache)
+        assert eng.cache.n_shards == 4
+        eng.register_graph("lj", a)
+
+    cold, warm = [], []
+    for epoch_reports in (cold, warm):
+        for eng in workers:
+            eng.submit(InferenceRequest("lj", h, w))
+            epoch_reports.append(eng.run_batch())
+    for rep in cold + warm:
+        np.testing.assert_allclose(rep.results[0].output, ref,
+                                   atol=1e-3, rtol=1e-3)
+
+    assert cold[0].uploaded_bytes > 0
+    # Worker 1's cold epoch already benefits from worker 0's demotions: its
+    # own demotions find the directory populated.
+    assert sum(r.duplicate_avoided_bytes for r in cold + warm) > 0, \
+        "directory must spare at least one duplicate demotion copy"
+    for rep in warm:
+        assert rep.uploaded_bytes == 0, \
+            "warm epoch must not re-stream any wire bytes"
+        assert rep.cache_hit_bytes == wire_total
+        assert rep.ici_bytes > 0, \
+            "remote-shard traffic must ride the ICI path"
+    stats = workers[0].cache_stats()
+    assert stats.remote_hits > 0 and stats.ici_bytes > 0
+
+
+def test_one_shard_directory_off_matches_pr2_bitexactly(quickstart_graph):
+    """A 1-shard ShardedSegmentCache with no directory must reproduce the
+    PR-2 TieredSegmentCache BatchReport byte accounting bit-exactly —
+    including under demotion pressure."""
+    rng = np.random.default_rng(12)
+    a = quickstart_graph
+    h = rng.standard_normal((a.n_rows, 16)).astype(np.float32)
+    wire_total = _wire_total(a, h)
+    pressure = max(4, wire_total // 3)
+
+    reports = {}
+    for flavor in ("tiered", "sharded1"):
+        eng = _engine(a, cache_device_bytes=pressure)
+        if flavor == "sharded1":
+            # swap in the 1-shard sharded tier before any graph binds to it
+            eng.cache = ShardedSegmentCache(
+                device_budget_bytes=pressure, n_shards=1)
+        eng.register_graph("lj", a)
+        reps = []
+        for _ in range(2):
+            eng.submit(InferenceRequest("lj", h))
+            reps.append(eng.run_batch())
+        reports[flavor] = reps
+    for pr2, one in zip(reports["tiered"], reports["sharded1"]):
+        assert one.uploaded_bytes == pr2.uploaded_bytes
+        assert one.cache_hit_bytes == pr2.cache_hit_bytes
+        assert one.promoted_bytes == pr2.promoted_bytes
+        assert one.bus_bytes == pr2.bus_bytes
+        assert one.segments_streamed == pr2.segments_streamed
+        assert one.aggregation_passes == pr2.aggregation_passes
+        assert one.ici_bytes == 0
+        assert one.directory_hit_bytes == pr2.directory_hit_bytes == 0
+        assert one.duplicate_avoided_bytes == 0
+        np.testing.assert_array_equal(pr2.results[0].output,
+                                      one.results[0].output)
+
+
+def test_engine_rejects_contradictory_sharding_config():
+    budget = 1 << 20
+    # cache features demanded while the cache is off -> error, not silence
+    with pytest.raises(ValueError, match="cache_enabled=False"):
+        ServingEngine(EngineConfig(device_budget_bytes=budget,
+                                   cache_enabled=False),
+                      directory=CacheDirectory())
+    # two replicas on one directory must carry distinct worker ids
+    directory = CacheDirectory()
+    ServingEngine(EngineConfig(device_budget_bytes=budget, worker_id=0),
+                  directory=directory)
+    with pytest.raises(ValueError, match="worker_id"):
+        ServingEngine(EngineConfig(device_budget_bytes=budget, worker_id=0),
+                      directory=directory)
+
+
+def test_serving_engine_over_real_mesh(quickstart_graph):
+    """ServingEngine(mesh=...) builds the sharded cache from a real device
+    mesh; exercised with >1 devices in the CI sharded job."""
+    import jax
+
+    if jax.device_count() < 4:
+        pytest.skip("needs >=4 devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    from repro.launch.mesh import make_cache_mesh
+
+    rng = np.random.default_rng(13)
+    a = quickstart_graph
+    h = rng.standard_normal((a.n_rows, 16)).astype(np.float32)
+    mesh = make_cache_mesh(4)
+    eng = ServingEngine(EngineConfig(device_budget_bytes=_budget(a)),
+                        mesh=mesh)
+    assert isinstance(eng.cache, ShardedSegmentCache)
+    assert eng.cache.devices is not None
+    eng.register_graph("lj", a)
+    out1 = eng.infer("lj", h)
+    out2 = eng.infer("lj", h)
+    ref = _reference_chain(a, h, [])
+    np.testing.assert_allclose(out1, ref, atol=1e-4)
+    np.testing.assert_allclose(out2, ref, atol=1e-4)
+    stats = eng.cache_stats()
+    assert stats.remote_hits > 0, \
+        "second pass must hit bricks owned by remote chips"
 
 
 # ---- gcn_epoch passthrough -----------------------------------------------

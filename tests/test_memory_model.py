@@ -1,12 +1,17 @@
 """Eq. (5)-(7) analytical memory model."""
+import importlib.util
+
 import numpy as np
 import pytest
 
 from repro.core import (
     FeatureSpec, calc_mem, ell_bucket_capacity, estimate_output_bytes,
-    estimate_resident_bytes, plan_memory_spec, required_bytes, segment_budget,
+    estimate_resident_bytes, plan_memory_dense_features, plan_memory_spec,
+    plan_memory_unified, required_bytes, segment_budget,
 )
 from repro.sparse import csr_from_dense
+
+HAVE_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
 
 
 @pytest.fixture
@@ -33,6 +38,19 @@ def test_eq5_monotonic_in_density():
 def test_calc_mem_matches_alg1():
     # (k+1) row pointers + q (col ids + values)
     assert calc_mem(10, 100, value_bytes=4, index_bytes=4) == 11 * 4 + 100 * 8
+
+
+def test_plan_memory_raw_alpha_entry_point(a):
+    """The raw Eq. 5-7 entry point (explicit α/β/θ) stays consistent with
+    its building blocks."""
+    from repro.core import plan_memory
+
+    est = plan_memory(a, 1000.0, 400.0, 100.0, m_total=1 << 22)
+    assert est.m_b == estimate_resident_bytes(1000.0, 400.0, 100.0)
+    assert est.p == segment_budget(1 << 22, est.m_c, est.m_b)
+    assert est.m_a == pytest.approx(3.0 * est.p)
+    assert est.feasible == (est.p > 0)
+    assert not plan_memory(a, 1000.0, 400.0, 100.0, m_total=1).feasible
 
 
 def test_plan_feasibility_threshold(a):
@@ -64,3 +82,103 @@ def test_ell_bucket_capacity():
     assert ell_bucket_capacity(8) == 8
     assert ell_bucket_capacity(9) == 16
     assert ell_bucket_capacity(5, buckets=[4, 12, 20]) == 12
+
+
+def test_ell_bucket_capacity_rejects_undersized_bucket_list():
+    """Regression (ISSUE 3): `true_width` beyond every explicit bucket used
+    to return max(buckets) — a capacity *smaller* than the true tile width,
+    silently truncating nonzeros on pad."""
+    assert ell_bucket_capacity(20, buckets=[4, 12, 20]) == 20  # boundary ok
+    with pytest.raises(ValueError, match="exceeds every explicit bucket"):
+        ell_bucket_capacity(21, buckets=[4, 12, 20])
+    with pytest.raises(ValueError, match="truncate"):
+        ell_bucket_capacity(1000, buckets=[8])
+    # the implicit power-of-two path keeps covering any width
+    assert ell_bucket_capacity(1000) == 1024
+
+
+# ---- planner unification (ISSUE 3 satellite) ------------------------------
+#
+# Property: the unified planner matches both pre-unification readings on
+# their home turf — the compressed-feature Eq. 5 reading (old
+# plan_memory_spec, reference-implemented below) for sparse feature
+# matrices, and the dense-resident invariants (M_B = N·F·bytes, M_C capped
+# at the dense X footprint) for sparsity_pct=0 — and the two surviving
+# entry points return *identical* MemoryEstimates for dense features (the
+# divergence that used to force equal-m_a scaffolding in test_engine.py).
+
+def _old_spec_reading(a, feat, m_total):
+    """Pre-unification plan_memory_spec, verbatim (the paper-faithful
+    reading the unified planner adopted)."""
+    itemsize = float(a.data.dtype.itemsize)
+    n_total = float(a.shape[0]) * float(a.shape[1])
+    alpha_a_dense = n_total * itemsize
+    alpha_b_dense = float(feat.dense_bytes)
+    sparsity_a_pct = 100.0 * (1.0 - a.nnz / max(n_total, 1.0))
+    m_c = estimate_output_bytes(alpha_a_dense, alpha_b_dense,
+                                sparsity_a_pct, feat.sparsity_pct)
+    if feat.sparsity_pct <= 0.0:
+        m_c = min(m_c, float(a.shape[0]) * feat.n_cols * feat.dtype_bytes)
+    m_b = float(feat.compressed_bytes)
+    return m_b, m_c, segment_budget(m_total, m_c, m_b)
+
+
+def _random_case(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(8, 120))
+    m = int(rng.integers(8, 120))
+    density = float(rng.uniform(0.005, 0.2))
+    dense = (rng.random((n, m)) < density).astype(np.float32)
+    dense[0, 0] = 1.0  # never empty
+    a = csr_from_dense(dense)
+    f = int(rng.integers(1, 300))
+    m_total = float(rng.integers(1, 1 << 22))
+    return rng, a, m, f, m_total
+
+
+def check_unified_matches_compressed_reading(seed):
+    rng, a, m, f, m_total = _random_case(seed)
+    feat = FeatureSpec(m, f, 4, sparsity_pct=float(rng.uniform(50.0, 99.9)))
+    est = plan_memory_unified(a, feat, m_total)
+    m_b, m_c, p = _old_spec_reading(a, feat, m_total)
+    assert est.m_b == m_b and est.m_c == m_c and est.p == p
+    assert est.feasible == (p > 0.0)
+    # plan_memory_spec is the same planner under its historical name
+    assert plan_memory_spec(a, feat, m_total) == est
+
+
+def check_unified_matches_dense_reading(seed):
+    rng, a, m, f, m_total = _random_case(seed)
+    feat = FeatureSpec(m, f, 4, sparsity_pct=0.0)
+    via_spec = plan_memory_spec(a, feat, m_total)
+    via_dense = plan_memory_dense_features(a, m, f, m_total)
+    # identical MemoryEstimates from both former entry points (frozen
+    # dataclass equality covers m_b, m_c, p, m_total, feasible)
+    assert via_spec == via_dense == plan_memory_unified(a, feat, m_total)
+    # dense home-turf invariants of the old dense reading
+    assert via_dense.m_b == m * f * 4
+    assert via_dense.m_c <= a.shape[0] * f * 4
+    assert via_dense.p == segment_budget(m_total, via_dense.m_c,
+                                         via_dense.m_b)
+
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_unified_matches_compressed_reading(seed):
+        check_unified_matches_compressed_reading(seed)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_unified_matches_dense_reading(seed):
+        check_unified_matches_dense_reading(seed)
+else:
+    @pytest.mark.parametrize("seed", range(20))
+    def test_unified_matches_compressed_reading(seed):
+        check_unified_matches_compressed_reading(seed)
+
+    @pytest.mark.parametrize("seed", range(20))
+    def test_unified_matches_dense_reading(seed):
+        check_unified_matches_dense_reading(seed)

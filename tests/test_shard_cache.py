@@ -1,0 +1,401 @@
+"""Mesh-sharded segment cache (io/shard_cache.py) + cross-worker directory.
+
+Covers the ISSUE-3 tentpole invariants:
+  * 1-shard equivalence — a ShardedSegmentCache over a 1-axis mesh with one
+    shard is byte-identical to a bare TieredSegmentCache under any op mix
+    (hypothesis-optional seeded sweep, the test_segment_cache pattern);
+  * deterministic placement — every key has one stable owner shard, and
+    per-shard budgets/LRU are independent (pressure on one shard never
+    evicts another shard's bricks);
+  * ICI accounting — remote-shard hits and shard placements are charged
+    through TieredMemorySystem on Path.ICI, local hits stay free, so
+    simulate-mode bytes_by_path stays honest;
+  * directory semantics — a peer's demoted host copy serves a local miss
+    (``cache/peer-promote``), a demotion whose brick a peer already holds
+    is dropped without a DtoH copy (duplicate_avoided), holders unpublish
+    when their copy leaves the host tier;
+  * real mesh placement — with >1 actual devices (CI runs the suite under
+    XLA_FLAGS=--xla_force_host_platform_device_count=8) bricks genuinely
+    live on their owner chip and remote hits come back on the local chip.
+"""
+import dataclasses
+import importlib.util
+
+import numpy as np
+import pytest
+
+from repro.io import (
+    CacheDirectory,
+    CacheStats,
+    SegmentKey,
+    ShardedSegmentCache,
+    TieredSegmentCache,
+    shard_of,
+)
+from repro.io.tiers import (
+    MemoryTier,
+    PAPER_GPU_SYSTEM,
+    Path,
+    TieredMemorySystem,
+)
+
+HAVE_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
+
+
+def _key(i, graph="g0"):
+    return SegmentKey(graph, i, "bricks", (i, 8, 8))
+
+
+def _key_for_shard(shard, n_shards, graph="g0", start=0):
+    """First segment id >= start whose owner is `shard`."""
+    i = start
+    while shard_of(_key(i, graph), n_shards) != shard:
+        i += 1
+    return _key(i, graph)
+
+
+# ---- deterministic placement & independence ------------------------------
+
+def test_shard_of_is_deterministic_and_in_range():
+    for n in (1, 2, 4, 7):
+        for i in range(50):
+            s = shard_of(_key(i), n)
+            assert 0 <= s < n
+            assert s == shard_of(_key(i), n)  # stable
+    assert shard_of(_key(0), 1) == 0
+
+
+def test_shard_of_spreads_keys_across_shards():
+    owners = {shard_of(_key(i), 4) for i in range(64)}
+    assert owners == {0, 1, 2, 3}, "CRC placement should reach every shard"
+
+
+def test_entries_land_on_owner_shard_and_budgets_are_independent():
+    cache = ShardedSegmentCache(device_budget_bytes=8, n_shards=4)
+    k_s0 = _key_for_shard(0, 4)
+    k_s1 = _key_for_shard(1, 4)
+    cache.put(k_s0, "a", 1)
+    cache.put(k_s1, "b", 1)
+    assert cache.shards[cache.shard_index_of(k_s0)].tier_of(k_s0) \
+        == MemoryTier.DEVICE
+    assert cache.shards[cache.shard_index_of(k_s1)].tier_of(k_s1) \
+        == MemoryTier.DEVICE
+    # Fill shard 1's slice (2 bytes) until it demotes; shard 0 is untouched.
+    start = 0
+    for _ in range(3):
+        k = _key_for_shard(1, 4, start=start)
+        start = k.segment_id + 1
+        cache.put(k, "x", 1)
+    assert cache.tier_of(k_s1) == MemoryTier.HOST, "shard 1 under pressure"
+    assert cache.tier_of(k_s0) == MemoryTier.DEVICE, \
+        "pressure on shard 1 must not evict shard 0's bricks"
+
+
+def test_invalid_construction():
+    with pytest.raises(ValueError):
+        ShardedSegmentCache(device_budget_bytes=8, n_shards=0)
+    with pytest.raises(ValueError):
+        ShardedSegmentCache(device_budget_bytes=8, n_shards=2, local_shard=2)
+    with pytest.raises(ValueError):
+        ShardedSegmentCache(device_budget_bytes=3, n_shards=4)
+    with pytest.raises(ValueError):
+        ShardedSegmentCache(device_budget_bytes=8, n_shards=2, devices=[1])
+
+
+# ---- ICI accounting ------------------------------------------------------
+
+def test_remote_hit_charged_on_ici_path_local_hit_free():
+    tms = TieredMemorySystem(PAPER_GPU_SYSTEM)
+    cache = ShardedSegmentCache(device_budget_bytes=64, n_shards=4,
+                                local_shard=0, tms=tms)
+    k_local = _key_for_shard(0, 4)
+    k_remote = _key_for_shard(2, 4)
+    cache.put(k_local, "l", 8)
+    assert tms.bytes_by_path().get(Path.ICI, 0) == 0, "local put is free"
+    cache.put(k_remote, "r", 8)     # fresh brick ships to its owner chip
+    assert tms.bytes_by_path()[Path.ICI] == 8
+    tags = [t.tag for t in tms.transfers]
+    assert tags == ["cache/shard-place"]
+
+    _, cost = cache.get_with_cost(k_local, nbytes=8)
+    assert cost == 0.0
+    assert tms.bytes_by_path()[Path.ICI] == 8, "local hit adds no ICI"
+    value, cost = cache.get_with_cost(k_remote, nbytes=8)
+    assert value == "r" and cost > 0.0
+    assert tms.bytes_by_path()[Path.ICI] == 16
+    assert tms.transfers[-1].tag == "cache/ici"
+    st = cache.stats
+    assert st.remote_hits == 1 and st.ici_bytes == 16
+    assert st.device_hits == 2 and st.hit_bytes == 16
+
+
+def test_ici_is_cheaper_than_dma_reupload():
+    """The point of the shard tier: an ICI hop beats re-crossing the host
+    bus, on both modeled systems."""
+    nbytes = 1 << 20
+    for spec in (PAPER_GPU_SYSTEM,):
+        tms = TieredMemorySystem(spec)
+        ici_s = tms.transfer(Path.ICI, MemoryTier.DEVICE, MemoryTier.DEVICE,
+                             nbytes)
+        dma_s = tms.transfer(Path.DMA, MemoryTier.HOST, MemoryTier.DEVICE,
+                             nbytes)
+        assert ici_s < dma_s
+        # ...but dearer than staying in local HBM (no transfer at all).
+        assert ici_s > nbytes / spec.hbm_bw
+
+
+def test_remote_host_hit_promotes_then_ships_over_ici():
+    tms = TieredMemorySystem(PAPER_GPU_SYSTEM)
+    cache = ShardedSegmentCache(device_budget_bytes=4, n_shards=2,
+                                local_shard=0, tms=tms)
+    k = _key_for_shard(1, 2)
+    cache.put(k, "v", 2)
+    # Overflow shard 1 (budget 2) so k demotes to its host slice.
+    start = k.segment_id + 1
+    for _ in range(2):
+        nk = _key_for_shard(1, 2, start=start)
+        start = nk.segment_id + 1
+        cache.put(nk, "w", 1)
+    assert cache.tier_of(k) == MemoryTier.HOST
+    tms.reset_accounting()
+    value, cost = cache.get_with_cost(k, nbytes=2)
+    assert value == "v"
+    assert sum(t.nbytes for t in tms.transfers
+               if t.tag == "cache/promote") == 2, "host->owner promotion"
+    assert sum(t.nbytes for t in tms.transfers
+               if t.tag == "cache/ici") == 2, "owner->local ship"
+    promote_s = next(t.seconds for t in tms.transfers
+                     if t.tag == "cache/promote")
+    ici_s = next(t.seconds for t in tms.transfers if t.tag == "cache/ici")
+    assert cost == pytest.approx(promote_s + ici_s)
+
+
+# ---- cross-worker cache directory ----------------------------------------
+
+def _pressured_pair(directory, budget=2):
+    """Two workers' caches over the same keys, demotion pressure on both."""
+    return [TieredSegmentCache(device_budget_bytes=budget,
+                               directory=directory, worker_id=w)
+            for w in (0, 1)]
+
+
+def test_directory_dedups_demotion_copies():
+    directory = CacheDirectory()
+    w0, w1 = _pressured_pair(directory)
+    for i in range(4):          # worker 0 demotes keys 0,1 and publishes
+        w0.put(_key(i), f"v{i}", 1)
+    assert directory.holder(_key(0)) == 0
+    for i in range(4):          # worker 1 demotes the same keys
+        w1.put(_key(i), f"v{i}", 1)
+    assert w1.stats.duplicate_avoided_bytes == 2, \
+        "worker 1 must skip host copies worker 0 already holds"
+    assert w1.stats.demoted_bytes == 0
+    assert directory.duplicates_avoided == 2
+    # worker 0 paid its demotions normally
+    assert w0.stats.demoted_bytes == 2
+
+
+def test_directory_serves_peer_miss_and_counts_hit_bytes():
+    tms = TieredMemorySystem(PAPER_GPU_SYSTEM)
+    directory = CacheDirectory()
+    w0 = TieredSegmentCache(device_budget_bytes=2, tms=tms,
+                            directory=directory, worker_id=0)
+    w1 = TieredSegmentCache(device_budget_bytes=2, tms=tms,
+                            directory=directory, worker_id=1)
+    for i in range(3):
+        w0.put(_key(i), f"v{i}", 1)     # k0 demoted -> published
+    assert w1.tier_of(_key(0)) is None
+    tms.reset_accounting()
+    value = w1.get(_key(0), nbytes=1)
+    assert value == "v0", "miss served from the peer's host copy"
+    assert tms.transfers[-1].tag == "cache/peer-promote"
+    st = w1.stats
+    assert st.directory_hits == 1 and st.directory_hit_bytes == 1
+    assert st.hit_bytes == 1 and st.misses == 0
+    assert st.promoted_bytes == 1, "peer promotion crossed the bus"
+    # the peer keeps its copy and the directory record
+    assert w0.tier_of(_key(0)) == MemoryTier.HOST
+    assert directory.holder(_key(0)) == 0
+    # worker 1 now holds a device copy; its later demotion is deduped
+    w1.put(_key(10), "x", 1)
+    w1.put(_key(11), "y", 1)          # evicts _key(0): peer holds it -> drop
+    assert w1.stats.duplicate_avoided_bytes == 1
+
+
+def test_directory_unpublishes_when_host_copy_leaves():
+    directory = CacheDirectory()
+    w0, w1 = _pressured_pair(directory)
+    for i in range(3):
+        w0.put(_key(i), f"v{i}", 1)
+    assert directory.holder(_key(0)) == 0
+    assert w0.get(_key(0), nbytes=1) == "v0"       # promotion consumes copy
+    assert directory.holder(_key(0)) is None
+    for i in range(3):
+        w1.put(_key(i, "gB"), f"b{i}", 1)
+    assert directory.holder(_key(0, "gB")) == 1
+    w1.invalidate_graph("gB")
+    assert directory.holder(_key(0, "gB")) is None
+
+
+def test_directory_rejects_duplicate_worker_claim():
+    directory = CacheDirectory()
+    directory.claim_worker(0)
+    directory.claim_worker(1)
+    with pytest.raises(ValueError, match="already claimed"):
+        directory.claim_worker(0)
+
+
+def test_directory_off_is_bitexact_noop():
+    plain = TieredSegmentCache(device_budget_bytes=2)
+    for i in range(4):
+        plain.put(_key(i), f"v{i}", 1)
+        plain.get(_key(i % 2), nbytes=1)
+    st = plain.stats
+    assert st.directory_hits == st.directory_hit_bytes == 0
+    assert st.duplicate_avoided_bytes == 0
+
+
+# ---- 1-shard equivalence property (the acceptance criterion) -------------
+
+_STAT_FIELDS = [f.name for f in dataclasses.fields(CacheStats)]
+
+
+def check_one_shard_matches_tiered(seed):
+    """Same op sequence through a bare TieredSegmentCache and a 1-shard
+    ShardedSegmentCache: every stat field, tier placement and used-byte
+    counter must agree exactly — and no ICI traffic may appear."""
+    rng = np.random.default_rng(seed)
+    dev_budget = int(rng.integers(4, 64))
+    host_budget = int(rng.integers(4, 64)) if rng.random() < 0.5 else None
+    tms_a = TieredMemorySystem(PAPER_GPU_SYSTEM)
+    tms_b = TieredMemorySystem(PAPER_GPU_SYSTEM)
+    ref = TieredSegmentCache(dev_budget, host_budget, tms=tms_a)
+    one = ShardedSegmentCache(dev_budget, host_budget, tms=tms_b, n_shards=1)
+    keys = [_key(j, graph=f"g{j % 3}") for j in range(12)]
+    for _ in range(100):
+        k = keys[int(rng.integers(0, len(keys)))]
+        nb = int(rng.integers(1, dev_budget + 8))
+        op = rng.random()
+        if op < 0.45:
+            assert ref.get(k, nbytes=nb) == one.get(k, nbytes=nb)
+        elif op < 0.9:
+            payload = ("payload", k.segment_id, nb)
+            ref.put(k, payload, nb)
+            one.put(k, payload, nb)
+        else:
+            assert ref.invalidate_graph(k.graph_id) \
+                == one.invalidate_graph(k.graph_id)
+    for f in _STAT_FIELDS:
+        assert getattr(ref.stats, f) == getattr(one.stats, f), f
+    assert one.stats.ici_bytes == 0 and one.stats.remote_hits == 0
+    assert ref.device_used_bytes == one.device_used_bytes
+    assert ref.host_used_bytes == one.host_used_bytes
+    for k in keys:
+        assert ref.tier_of(k) == one.tier_of(k)
+    assert tms_a.bytes_by_path() == tms_b.bytes_by_path()
+    assert tms_a.seconds_by_path() == tms_b.seconds_by_path()
+
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_one_shard_matches_tiered(seed):
+        check_one_shard_matches_tiered(seed)
+else:
+    @pytest.mark.parametrize("seed", range(25))
+    def test_one_shard_matches_tiered(seed):
+        check_one_shard_matches_tiered(seed)
+
+
+# ---- sharded capacity/accounting sweep -----------------------------------
+
+def check_sharded_capacity_and_accounting(seed):
+    rng = np.random.default_rng(seed)
+    n_shards = int(rng.integers(2, 6))
+    dev_budget = int(rng.integers(n_shards * 4, 128))
+    cache = ShardedSegmentCache(dev_budget, n_shards=n_shards,
+                                local_shard=int(rng.integers(0, n_shards)))
+    per_shard = dev_budget // n_shards
+    keys = [_key(j, graph=f"g{j % 3}") for j in range(16)]
+    requested = 0
+    for _ in range(90):
+        k = keys[int(rng.integers(0, len(keys)))]
+        nb = int(rng.integers(1, per_shard + 8))
+        if rng.random() < 0.5:
+            requested += nb
+            cache.get(k, nbytes=nb)
+        else:
+            cache.put(k, ("p", k.segment_id, nb), nb)
+        for shard in cache.shards:
+            assert shard.device_used_bytes <= per_shard
+    st_ = cache.stats
+    assert st_.hit_bytes + st_.miss_bytes == requested
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_sharded_capacity_and_accounting(seed):
+        check_sharded_capacity_and_accounting(seed)
+else:
+    @pytest.mark.parametrize("seed", range(25))
+    def test_sharded_capacity_and_accounting(seed):
+        check_sharded_capacity_and_accounting(seed)
+
+
+# ---- real multi-device mesh placement (CI sharded job) -------------------
+
+def _device_of(arr):
+    devs = arr.devices() if callable(getattr(arr, "devices", None)) \
+        else {arr.device()}
+    assert len(devs) == 1
+    return next(iter(devs))
+
+
+@pytest.fixture
+def four_device_mesh():
+    import jax
+
+    if jax.device_count() < 4:
+        pytest.skip("needs >=4 devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    from repro.launch.mesh import make_cache_mesh
+
+    return make_cache_mesh(4)
+
+
+def test_from_mesh_places_bricks_on_owner_chips(four_device_mesh):
+    import jax
+    import jax.numpy as jnp
+
+    mesh = four_device_mesh
+    cache = ShardedSegmentCache.from_mesh(mesh, device_budget_bytes=1 << 20)
+    assert cache.n_shards == 4
+    local_dev = jax.devices()[0]
+    arrays = {}
+    for shard in range(4):
+        k = _key_for_shard(shard, 4, start=100 * shard)
+        arr = jnp.arange(16, dtype=jnp.float32) + shard
+        cache.put(k, arr, int(arr.nbytes))
+        arrays[shard] = (k, np.asarray(arr))
+    for shard, (k, ref) in arrays.items():
+        stored = cache.shards[shard]._device[k].value
+        assert _device_of(stored) == cache.devices[shard], \
+            "brick must live on its owner chip"
+        got = cache.get(k, nbytes=int(ref.nbytes))
+        assert _device_of(got) == local_dev, \
+            "remote hit must come back on the local chip (the ICI hop)"
+        np.testing.assert_array_equal(np.asarray(got), ref)
+    assert cache.stats.remote_hits == 3
+    assert cache.stats.ici_bytes > 0
+
+
+def test_make_cache_mesh_rejects_oversubscription():
+    import jax
+
+    from repro.launch.mesh import make_cache_mesh
+
+    with pytest.raises(ValueError):
+        make_cache_mesh(jax.device_count() + 1)
