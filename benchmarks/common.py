@@ -9,6 +9,7 @@ exactly. The I/O model uses the paper's hardware constants
 from __future__ import annotations
 
 import functools
+import os
 from typing import Dict, List
 
 import numpy as np
@@ -20,7 +21,10 @@ from repro.data import (
 from repro.io.tiers import PAPER_GPU_SYSTEM
 from repro.sparse.formats import CSR
 
-SCALE = 1e-3
+# Dataset scale relative to the paper's full graphs. Overridable so the CI
+# smoke job can run the full benchmark drivers on tiny configs
+# (AIRES_BENCH_SCALE=1e-4) without a separate code path.
+SCALE = float(os.environ.get("AIRES_BENCH_SCALE", "1e-3"))
 FEATURE_DIM = 256          # paper §V-A
 FEATURE_SPARSITY = 99.0    # paper §V-A
 

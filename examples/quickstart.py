@@ -9,7 +9,7 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import AiresConfig, AiresSpGEMM
+from repro.core import AiresConfig, AiresSpGEMM, plan_memory_dense_features
 from repro.data import SUITESPARSE_SPECS, generate_graph, normalized_adjacency, scaled_spec
 from repro.sparse.ref_spgemm import spgemm_csr_dense
 
@@ -17,8 +17,10 @@ from repro.sparse.ref_spgemm import spgemm_csr_dense
 a = normalized_adjacency(generate_graph(scaled_spec(SUITESPARSE_SPECS["socLJ1"], 1e-4), seed=0))
 h = np.random.default_rng(0).standard_normal((a.n_rows, 32)).astype(np.float32)
 
-# Budget forces out-of-core streaming (~half the working set).
-budget = int((a.nbytes() + 2 * h.nbytes) * 0.5)
+# Budget: the Eq. 5-7 resident set (M_B + M_C) must fit; granting only a
+# fraction of A's bytes on top forces out-of-core streaming.
+est = plan_memory_dense_features(a, a.n_rows, h.shape[1], float("inf"))
+budget = int(est.m_b + est.m_c + 0.5 * a.nbytes())
 engine = AiresSpGEMM(AiresConfig(device_budget_bytes=budget, bm=8, bk=8))
 x = engine(a, jnp.asarray(h))
 

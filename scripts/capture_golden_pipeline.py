@@ -1,0 +1,147 @@
+"""Capture golden scheduler metrics + engine byte accounting.
+
+Run once against the pre-refactor monolithic schedulers (PR 3) to freeze
+their simulate-mode `ScheduleMetrics` on the fig6 configurations, and the
+serving engine's `BatchReport` byte accounting on the quickstart scenario.
+`tests/test_pipeline.py` asserts the plan-builder + cost-interpreter stack
+reproduces these to float equality, and the execute interpreter reproduces
+the byte accounting exactly — ISSUE 4's acceptance criterion.
+
+Usage:  PYTHONPATH=src python scripts/capture_golden_pipeline.py
+Writes: tests/data/golden_pipeline.json
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+
+def metrics_record(m) -> dict:
+    return {
+        "scheduler": m.scheduler,
+        "makespan_s": m.makespan_s,
+        "io_modeled_s": m.io_modeled_s,
+        "compute_modeled_s": m.compute_modeled_s,
+        "host_preprocess_s": m.host_preprocess_s,
+        "bytes_by_path": m.bytes_by_path,
+        "seconds_by_path": m.seconds_by_path,
+        "total_transfer_bytes": m.total_transfer_bytes,
+        "cache_hit_bytes": m.cache_hit_bytes,
+        "merge_events": m.merge_events,
+        "merge_io_s": m.merge_io_s,
+        "segments": m.segments,
+        "oom": m.oom,
+    }
+
+
+def report_record(r) -> dict:
+    return {
+        "uploaded_bytes": r.uploaded_bytes,
+        "cache_hit_bytes": r.cache_hit_bytes,
+        "promoted_bytes": r.promoted_bytes,
+        "segments_streamed": r.segments_streamed,
+        "aggregation_passes": r.aggregation_passes,
+        "ici_bytes": r.ici_bytes,
+        "directory_hit_bytes": r.directory_hit_bytes,
+        "duplicate_avoided_bytes": r.duplicate_avoided_bytes,
+    }
+
+
+def fig6_golden() -> dict:
+    from benchmarks.common import (
+        FEATURE_DIM, budget_for, dataset, feature_spec,
+    )
+    from repro.core import SCHEDULERS
+    from repro.io.tiers import PAPER_GPU_SYSTEM
+
+    out = {}
+    for name in ["rUSA", "kV2a", "kU1a", "socLJ1", "kP1a"]:
+        a = dataset(name)
+        feat = feature_spec(a)
+        budget = budget_for(name, a, feat)
+        for sched in ["maxmemory", "ucg", "etc", "aires"]:
+            res = SCHEDULERS[sched](
+                PAPER_GPU_SYSTEM, device_budget=budget).run(
+                    a, feat, mode="simulate", dataset=name)
+            out[f"{name}/{sched}"] = metrics_record(res.metrics)
+    return out
+
+
+def cached_sim_golden() -> dict:
+    """AIRES simulate mode with a shared segment cache: cold + warm."""
+    from benchmarks.common import budget_for, dataset, feature_spec
+    from repro.core import SCHEDULERS
+    from repro.io import TieredSegmentCache
+    from repro.io.tiers import PAPER_GPU_SYSTEM
+
+    a = dataset("kV2a")
+    feat = feature_spec(a, 64)
+    budget = budget_for("kV2a", a, feat)
+    cache = TieredSegmentCache(device_budget_bytes=budget)
+    sched = SCHEDULERS["aires"](PAPER_GPU_SYSTEM, device_budget=budget,
+                                segment_cache=cache)
+    cold = sched.run(a, feat, dataset="kV2a").metrics
+    warm = sched.run(a, feat, dataset="kV2a").metrics
+    return {"cold": metrics_record(cold), "warm": metrics_record(warm)}
+
+
+def engine_golden() -> dict:
+    from repro.core import plan_memory_dense_features
+    from repro.data import (
+        SUITESPARSE_SPECS, generate_graph, normalized_adjacency, scaled_spec,
+    )
+    from repro.io import CacheDirectory
+    from repro.runtime import EngineConfig, InferenceRequest, ServingEngine
+
+    a = normalized_adjacency(generate_graph(
+        scaled_spec(SUITESPARSE_SPECS["socLJ1"], 1e-4), seed=0))
+    est = plan_memory_dense_features(a, a.n_rows, 64, float("inf"))
+    budget = int(est.m_b + est.m_c + 0.6 * a.nbytes())
+    rng = np.random.default_rng(1)
+    h = rng.standard_normal((a.n_rows, 32)).astype(np.float32)
+    w = [rng.standard_normal((32, 16)).astype(np.float32)]
+
+    out = {}
+    for label, kw, nworkers, shards in [
+        ("cache_on", {}, 1, 1),
+        ("cache_off", {"cache_enabled": False}, 1, 1),
+        ("shard4", {"cache_shards": 4}, 2, 4),
+    ]:
+        directory = CacheDirectory() if nworkers > 1 else None
+        workers = [
+            ServingEngine(EngineConfig(device_budget_bytes=budget,
+                                       max_batch_features=64,
+                                       worker_id=wid, **kw),
+                          directory=directory)
+            for wid in range(nworkers)
+        ]
+        for eng in workers:
+            eng.register_graph("lj", a)
+        reports = []
+        for _epoch in range(2):
+            for eng in workers:
+                eng.submit(InferenceRequest("lj", h, w))
+                reports.append(report_record(eng.run_batch()))
+        out[label] = reports
+    return out
+
+
+def main() -> None:
+    golden = {
+        "fig6": fig6_golden(),
+        "cached_sim": cached_sim_golden(),
+        "engine": engine_golden(),
+    }
+    path = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "tests", "data", "golden_pipeline.json")
+    path = os.path.abspath(path)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(golden, f, indent=1, sort_keys=True)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,3 +1,9 @@
-from repro.checkpoint.checkpointer import Checkpointer, latest_step
+from repro.checkpoint.checkpointer import (
+    Checkpointer,
+    latest_step,
+    load_segment_bricks,
+    save_segment_bricks,
+)
 
-__all__ = ["Checkpointer", "latest_step"]
+__all__ = ["Checkpointer", "latest_step", "load_segment_bricks",
+           "save_segment_bricks"]

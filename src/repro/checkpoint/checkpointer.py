@@ -15,10 +15,11 @@ Design points for 1000+-node deployments:
 """
 from __future__ import annotations
 
+import base64
 import json
 import os
 import shutil
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -121,3 +122,82 @@ class Checkpointer:
             if n.startswith("step_") and not n.endswith(".tmp"))
         for s in steps[: -self.keep_last]:
             shutil.rmtree(self._path(s), ignore_errors=True)
+
+
+# ---- segment-brick checkpoints (serving warm start) -------------------------
+#
+# A serving engine's segment cache holds densified BlockELL bricks whose keys
+# are content-addressed (csr_fingerprint namespaces), so they survive process
+# restarts. `save_segment_bricks` persists (metadata, arrays) pairs through
+# the same atomic Checkpointer machinery (tmp dir + fsync'd manifest +
+# rename); `load_segment_bricks` reads the newest complete checkpoint back.
+# Brick metadata (the SegmentKey fields + BlockELL geometry) rides inside the
+# array names — JSON, urlsafe-base64-encoded so it can never collide with the
+# '/' separator of the flattened-tree format — keeping the manifest the
+# single source of truth and the publish atomic.
+#
+# Bricks live in their own `segment_bricks/` subdirectory of the directory
+# the caller names: the brick Checkpointer prunes aggressively (keep_last=1),
+# and it must never be able to prune — or be confused by — a *training*
+# checkpoint the operator keeps in the same place.
+
+BRICKS_SUBDIR = "segment_bricks"
+
+
+def _encode_brick_meta(meta: Dict[str, Any]) -> str:
+    blob = json.dumps(meta, sort_keys=True).encode()
+    return base64.urlsafe_b64encode(blob).decode().rstrip("=")
+
+
+def _decode_brick_meta(token: str) -> Dict[str, Any]:
+    pad = "=" * (-len(token) % 4)
+    return json.loads(base64.urlsafe_b64decode(token + pad))
+
+
+def save_segment_bricks(
+    directory: str,
+    bricks: List[Tuple[Dict[str, Any], Dict[str, np.ndarray]]],
+    step: int = 0,
+) -> str:
+    """Atomically persist cache bricks as (json-able meta, named arrays)."""
+    params = {
+        _encode_brick_meta(meta): {k: np.asarray(v) for k, v in arrays.items()}
+        for meta, arrays in bricks
+    }
+    target = os.path.join(directory, BRICKS_SUBDIR)
+    return Checkpointer(target, keep_last=1).save(step, params, opt_state={})
+
+
+def load_segment_bricks(
+    directory: str,
+    step: Optional[int] = None,
+) -> List[Tuple[Dict[str, Any], Dict[str, np.ndarray]]]:
+    """Read back the newest (or given) brick checkpoint; [] if none.
+
+    Keys that do not parse as brick entries (wrong arity, undecodable
+    metadata) are skipped, not fatal: the function may be pointed at a
+    directory that predates — or never was — a brick checkpoint.
+    """
+    target = os.path.join(directory, BRICKS_SUBDIR)
+    if step is None:
+        step = latest_step(target)
+    if step is None:
+        return []
+    path = os.path.join(target, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    grouped: Dict[str, Dict[str, np.ndarray]] = {}
+    for key in manifest["keys"]:
+        parts = key.split("/")
+        if len(parts) != 3 or parts[0] != "params":
+            continue
+        grouped.setdefault(parts[1], {})[parts[2]] = data[key]
+    out = []
+    for token, arrays in grouped.items():
+        try:
+            meta = _decode_brick_meta(token)
+        except (ValueError, json.JSONDecodeError):
+            continue
+        out.append((meta, arrays))
+    return out

@@ -2,7 +2,8 @@
 
   memory_model : Eq. (5)-(7) analytical planning
   robw         : Algorithm 1 row block-wise alignment (+ RoBW-128)
-  scheduler    : Algorithm 2 three-phase dual-way scheduling + baselines
+  pipeline     : typed pipeline-plan IR + cost/execute interpreters
+  scheduler    : Algorithm 2 plan builders (AIRES + baselines)
   spgemm       : AiresSpGEMM public API + chained GCN epoch runner
 """
 from repro.core.memory_model import (
@@ -18,6 +19,19 @@ from repro.core.memory_model import (
     plan_memory_unified,
     required_bytes,
     segment_budget,
+)
+from repro.core.pipeline import (
+    AllocOp,
+    CacheProbeOp,
+    ComputeOp,
+    CostInterpreter,
+    ExecuteInterpreter,
+    HostPreprocessOp,
+    PhaseSpec,
+    PipelinePlan,
+    PlanOp,
+    TransferOp,
+    modeled_spgemm_seconds,
 )
 from repro.core.robw import (
     RoBWPlan,
@@ -49,5 +63,8 @@ __all__ = [
     "robw_partition", "robw_transpose_plan", "segments_to_block_ell",
     "SCHEDULERS", "AiresScheduler", "ETCScheduler", "MaxMemoryScheduler",
     "ScheduleMetrics", "ScheduleResult", "UCGScheduler",
+    "AllocOp", "CacheProbeOp", "ComputeOp", "CostInterpreter",
+    "ExecuteInterpreter", "HostPreprocessOp", "PhaseSpec", "PipelinePlan",
+    "PlanOp", "TransferOp", "modeled_spgemm_seconds",
     "AiresConfig", "AiresSpGEMM", "EpochMetrics", "gcn_epoch",
 ]

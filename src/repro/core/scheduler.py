@@ -7,6 +7,14 @@ latency are **modeled** with the calibrated tiered-memory cost model —
 exactly the split the paper uses (§V-A: "We model the I/O transfer
 operations and kernel-level computation latency with simulations").
 
+Since the pipeline-plan IR refactor, every scheduler is a pure **plan
+builder**: `build_plan()` emits a typed `repro.core.pipeline.PipelinePlan`
+(ops on declared resource lanes, grouped into phases), and `run()` hands
+that one plan to an interpreter — `CostInterpreter` for ``simulate`` (the
+paper's large-scale accounting), `ExecuteInterpreter` for ``execute``
+(real Pallas kernels on the streamed segments). Simulate and execute can
+no longer diverge on I/O accounting: they interpret the same op list.
+
 Schedulers:
   AiresScheduler     — C1+C2+C4+C5: RoBW alignment, Eq.5-7 planning,
                        dual-way Phase I, double-buffered Phase II,
@@ -17,16 +25,12 @@ Schedulers:
                        at the larger-input size (paper §III-B), no alignment.
 
 Policy flags mirror paper Table I (Alignment / DMA / UM / Dual-way).
-The `execute` mode streams real segments through the Pallas kernel
-(interpret on CPU) and returns the exact output — used by tests; the
-`simulate` mode models kernel time analytically — used by the large-scale
-benchmarks, like the paper.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Literal, Optional
+from typing import Literal, Optional
 
 import numpy as np
 
@@ -35,6 +39,25 @@ from repro.core.memory_model import (
     MemoryEstimate,
     plan_memory_unified,
     required_bytes,
+)
+from repro.core.pipeline import (
+    LANE_COMPUTE,
+    LANE_DMA,
+    LANE_GDS,
+    LANE_HOST,
+    LANE_SIO,
+    LANE_UM,
+    AllocOp,
+    CacheProbeOp,
+    ComputeOp,
+    CostInterpreter,
+    ExecuteInterpreter,
+    HostPreprocessOp,
+    PhaseSpec,
+    PipelinePlan,
+    ScheduleMetrics,
+    TransferOp,
+    modeled_spgemm_seconds,
 )
 from repro.core.robw import (
     RoBWPlan,
@@ -47,42 +70,15 @@ from repro.io.segment_cache import SegmentKey, TieredSegmentCache
 from repro.io.shard_cache import ShardedSegmentCache
 from repro.io.tiers import (
     MemoryTier,
-    OutOfMemory,
     Path,
-    TieredMemorySystem,
     TierSpec,
 )
-from repro.sparse.formats import CSR, csr_row_slice
+from repro.sparse.formats import CSR, csr_fingerprint
 
-
-@dataclasses.dataclass
-class ScheduleMetrics:
-    """Everything the paper's figures read off a run."""
-
-    scheduler: str
-    dataset: str = ""
-    # Latency components (seconds)
-    host_preprocess_s: float = 0.0   # modeled: RoBW / densify / merge / pack
-    host_measured_s: float = 0.0     # wall-clock of the real host work (diagnostic)
-    io_modeled_s: float = 0.0        # modeled: sum of transfer seconds
-    compute_modeled_s: float = 0.0   # modeled: device kernel seconds
-    makespan_s: float = 0.0          # overlapped end-to-end estimate
-    # I/O accounting (Fig. 7/8)
-    bytes_by_path: Dict[str, int] = dataclasses.field(default_factory=dict)
-    seconds_by_path: Dict[str, float] = dataclasses.field(default_factory=dict)
-    total_transfer_bytes: int = 0
-    cache_hit_bytes: int = 0         # wire bytes served by the segment cache
-    merge_events: int = 0
-    merge_io_s: float = 0.0          # modeled DtoH/HtoD seconds for merges
-    segments: int = 0
-    oom: bool = False
-
-    def merge_overhead_frac(self) -> float:
-        """Fig. 3 metric: 'merging the partial segments, and data transfer
-        time between the GPU and host memory ... measured over the
-        computation latency'."""
-        denom = max(self.compute_modeled_s, 1e-12)
-        return (self.host_preprocess_s + self.merge_io_s) / denom
+__all__ = [
+    "SCHEDULERS", "AiresScheduler", "ETCScheduler", "MaxMemoryScheduler",
+    "ScheduleMetrics", "ScheduleResult", "UCGScheduler",
+]
 
 
 @dataclasses.dataclass
@@ -91,6 +87,7 @@ class ScheduleResult:
     metrics: ScheduleMetrics
     plan: Optional[RoBWPlan] = None
     mem: Optional[MemoryEstimate] = None
+    pipeline: Optional[PipelinePlan] = None   # the IR both interpreters read
 
 
 def _spgemm_flops(a: CSR, f: int) -> float:
@@ -98,7 +95,7 @@ def _spgemm_flops(a: CSR, f: int) -> float:
 
 
 class _BaseScheduler:
-    """Shared accounting.
+    """Shared accounting + the build→interpret `run()` driver.
 
     Feasibility calibration (`oom_fraction`): Table III shows each baseline's
     minimum viable budget as a fraction of Table II's memory requirement —
@@ -110,6 +107,8 @@ class _BaseScheduler:
 
     name = "base"
     oom_fraction = 0.0  # min budget / required_bytes; 0 → model-driven only
+    segment_cache: Optional[
+        "TieredSegmentCache | ShardedSegmentCache"] = None
 
     def __init__(
         self,
@@ -127,20 +126,8 @@ class _BaseScheduler:
         return flops / (self.peak_flops * self.compute_efficiency)
 
     def _spgemm_seconds(self, nnz: int, feat: FeatureSpec) -> float:
-        """Device time for a compressed-×-compressed partial product.
-
-        Hypersparse SpGEMM is HBM-bound, not FLOP-bound: per A-nonzero the
-        kernel reads the A entry, gathers the matching B row segment
-        (dens_B·F values+ids) and writes ~E[matches] C entries. Effective
-        bandwidth is a fraction of peak (irregular access).
-        """
-        dens_b = (100.0 - feat.sparsity_pct) / 100.0
-        val = feat.dtype_bytes
-        idx = feat.index_bytes
-        per_nnz = (val + idx) + dens_b * feat.n_cols * (val + idx) \
-            + max(dens_b * feat.n_cols, 1.0) * (val + idx)
-        bytes_touched = nnz * per_nnz
-        return bytes_touched / (self.spec.hbm_bw * self.compute_efficiency)
+        return modeled_spgemm_seconds(nnz, feat, self.spec,
+                                      self.compute_efficiency)
 
     def _host_seconds(self, nbytes: float, events: int = 1) -> float:
         """Modeled host staging/merge cost: DRAM memcpy + per-event latency.
@@ -163,10 +150,24 @@ class _BaseScheduler:
             return False
         return self.device_budget < self.oom_fraction * required_bytes(a, feat)
 
+    def build_plan(self, a: CSR, h,
+                   mode: Literal["simulate", "execute"] = "simulate",
+                   dataset: str = "") -> PipelinePlan:
+        raise NotImplementedError
+
     def run(self, a: CSR, h,
             mode: Literal["simulate", "execute"] = "simulate",
             dataset: str = "") -> ScheduleResult:
-        raise NotImplementedError
+        """Build the plan, interpret it. One plan — two interpreters."""
+        plan = self.build_plan(a, h, mode=mode, dataset=dataset)
+        cls = ExecuteInterpreter if mode == "execute" else CostInterpreter
+        interp = cls(self.spec, segment_cache=self.segment_cache)
+        metrics, x = interp.run(plan)
+        # The returned plan keeps op metadata (re-estimable) but not the
+        # densified bricks / kernel closures it was executed with.
+        plan.release_payloads()
+        return ScheduleResult(x=x, metrics=metrics, plan=plan.robw,
+                              mem=plan.mem, pipeline=plan)
 
 
 class AiresScheduler(_BaseScheduler):
@@ -192,112 +193,113 @@ class AiresScheduler(_BaseScheduler):
         # wire bytes are reported in metrics.cache_hit_bytes.
         self.segment_cache = segment_cache
 
-    def run(self, a: CSR, h, mode="simulate", dataset="") -> ScheduleResult:
-        tms = TieredMemorySystem(self.spec)
+    def build_plan(self, a: CSR, h, mode="simulate",
+                   dataset="") -> PipelinePlan:
         feat = self._feat(h)
         f = feat.n_cols
-        m = ScheduleMetrics(scheduler=self.name, dataset=dataset)
+        plan = PipelinePlan(scheduler=self.name, dataset=dataset)
 
         # ---- Phase 0: analytical planning (Eq. 5-7), no data touched.
         mem = plan_memory_unified(a, feat, m_total=self.device_budget)
+        plan.mem = mem
         if not mem.feasible:
-            m.oom = True
-            return ScheduleResult(x=None, metrics=m, mem=mem)
+            plan.oom = True
+            return plan
+        plan.phases = [PhaseSpec("load"), PhaseSpec("stream"),
+                       PhaseSpec("store")]
 
-        # ---- Phase I: dual-way loads.
-        # B/H: storage -> device directly (GDS path analogue).
-        tms.alloc(MemoryTier.DEVICE, "H", int(mem.m_b))
-        tms.alloc(MemoryTier.DEVICE, "C", int(mem.m_c))
-        t_b = tms.transfer(Path.GDS, MemoryTier.STORAGE, MemoryTier.DEVICE,
-                           int(mem.m_b), tag="phaseI/H")
-        # A: storage -> host for preprocessing.
+        # ---- Phase I: dual-way loads. B/H ride the direct storage→device
+        # path (GDS analogue) on their own lane; A crosses storage→host and
+        # feeds the RoBW pass — the two chains overlap (Fig. 5).
+        plan.add(AllocOp(MemoryTier.DEVICE, "H", int(mem.m_b)), "load")
+        plan.add(AllocOp(MemoryTier.DEVICE, "C", int(mem.m_c)), "load")
+        plan.add(TransferOp(Path.GDS, MemoryTier.STORAGE, MemoryTier.DEVICE,
+                            int(mem.m_b), tag="phaseI/H"), "load", LANE_GDS)
         a_bytes = a.nbytes()
-        tms.alloc(MemoryTier.HOST, "A", a_bytes)
-        t_a = tms.transfer(Path.STORAGE_HOST, MemoryTier.STORAGE,
-                           MemoryTier.HOST, a_bytes, tag="phaseI/A")
-        phase1_io = max(t_b, t_a)  # dual-way: paths overlap (Fig. 5)
+        plan.add(AllocOp(MemoryTier.HOST, "A", a_bytes), "load")
+        i_load_a = plan.add(
+            TransferOp(Path.STORAGE_HOST, MemoryTier.STORAGE, MemoryTier.HOST,
+                       a_bytes, tag="phaseI/A"), "load", LANE_SIO)
 
-        # RoBW partitioning on the CPU: executed for real; its makespan
-        # contribution is modeled as one indptr scan + per-segment events
-        # (see _host_seconds for why).
+        # RoBW partitioning on the CPU: executed for real at build time; its
+        # makespan contribution is modeled as one indptr scan + per-segment
+        # events (see _host_seconds for why).
         t0 = time.perf_counter()
-        plan = robw_partition(a, int(mem.m_a), align=self.align)
-        m.host_measured_s += time.perf_counter() - t0
-        m.host_preprocess_s += self._host_seconds(
-            a.indptr.nbytes, events=plan.n_segments)
-        m.segments = plan.n_segments
+        robw = robw_partition(a, int(mem.m_a), align=self.align)
+        measured = time.perf_counter() - t0
+        plan.robw = robw
+        plan.segments = robw.n_segments
+        plan.add(HostPreprocessOp(
+            self._host_seconds(a.indptr.nbytes, events=robw.n_segments),
+            measured_s=measured), "load", LANE_HOST, deps=(i_load_a,))
 
         # ---- Phase II: double-buffered streaming + per-segment compute.
-        seg_io: List[float] = []
-        seg_cmp: List[float] = []
-        out = np.zeros((a.n_rows, f), dtype=np.float32) if mode == "execute" else None
-        ell_iter = (segments_to_block_ell(a, plan, bm=self.bm, bk=self.bk)
-                    if mode == "execute" or self.wire_format == "bricks" else None)
-        ells = list(ell_iter) if ell_iter is not None else [None] * plan.n_segments
+        # DMA-lane serialization + compute→transfer deps reproduce the
+        # double-buffer recurrence (segment k+1's transfer overlaps segment
+        # k's compute; each resource is serial).
+        execute = mode == "execute"
+        ell_iter = (segments_to_block_ell(a, robw, bm=self.bm, bk=self.bk)
+                    if execute or self.wire_format == "bricks" else None)
+        ells = (list(ell_iter) if ell_iter is not None
+                else [None] * robw.n_segments)
+        if execute:
+            plan.out_shape = (a.n_rows, f)
 
         cache = self.segment_cache
         # "sim:" prefix keeps simulate-mode token entries from ever aliasing
-        # an execute-mode device payload in a shared cache.
-        graph_ns = (f"sim:g{id(a)}:{a.nnz}:{a.shape[0]}x{a.shape[1]}"
-                    f":w{f}:b{self.device_budget}")
-        for i, (seg, ell) in enumerate(zip(plan.segments, ells)):
+        # an execute-mode device payload in a shared cache. The graph id is
+        # a content fingerprint, never id(a): CPython reuses ids after GC,
+        # which could alias two different graphs into one namespace.
+        graph_ns = (f"sim:g{csr_fingerprint(a)}:{a.nnz}"
+                    f":{a.shape[0]}x{a.shape[1]}:w{f}:b{self.device_budget}")
+        for i, (seg, ell) in enumerate(zip(robw.segments, ells)):
             if self.wire_format == "bricks" and ell is not None:
                 wire_bytes = ell.nbytes()
                 wire_shape = tuple(ell.blocks.shape)
             else:
                 wire_bytes = seg.nbytes
                 wire_shape = (seg.n_rows, seg.nnz)
+            miss = TransferOp(Path.DMA, MemoryTier.HOST, MemoryTier.DEVICE,
+                              wire_bytes, tag="phaseII/seg")
             if cache is not None:
                 key = SegmentKey(graph_ns, i, self.wire_format, wire_shape)
-                hit, promote_s = cache.get_with_cost(
-                    key, nbytes=wire_bytes, tms=tms)
-                if hit is not None:
-                    m.cache_hit_bytes += wire_bytes
-                    # Device-tier hit: free. Host-tier hit: the promotion DMA
-                    # (already in tms) is this segment's pipeline I/O slot.
-                    seg_io.append(promote_s)
-                else:
-                    seg_io.append(tms.transfer(
-                        Path.DMA, MemoryTier.HOST, MemoryTier.DEVICE,
-                        wire_bytes, tag="phaseII/seg"))
-                    cache.put(key, ell if ell is not None else True,
-                              wire_bytes, tms=tms, pin=a)
+                i_io = plan.add(
+                    CacheProbeOp(key, wire_bytes, miss,
+                                 value=ell if ell is not None else True,
+                                 pin=a), "stream", LANE_DMA)
             else:
-                seg_io.append(tms.transfer(
-                    Path.DMA, MemoryTier.HOST, MemoryTier.DEVICE,
-                    wire_bytes, tag="phaseII/seg"))
-            seg_cmp.append(self._spgemm_seconds(seg.nnz, feat))
-            if mode == "execute" and ell is not None:
-                from repro.kernels import bcsr_spmm as _spmm_op
-                import jax.numpy as jnp
-                x_seg = np.asarray(_spmm_op(ell, jnp.asarray(h)))
-                out[seg.row_start:seg.row_end] = x_seg[: seg.n_rows]
-
-        # Double buffering: segment-k+1 transfer overlaps segment-k compute;
-        # the DMA channel and the compute unit are each serial resources.
-        pipeline = 0.0
-        io_free = 0.0
-        for io_s, cmp_s in zip(seg_io, seg_cmp):
-            io_done = io_free + io_s          # DMA channel availability
-            pipeline = max(pipeline, io_done) + cmp_s
-            io_free = io_done
-        phase2 = pipeline
+                i_io = plan.add(miss, "stream", LANE_DMA)
+            kernel = (self._segment_kernel(ell, seg, h)
+                      if execute and ell is not None else None)
+            plan.add(ComputeOp(self._spgemm_seconds(seg.nnz, feat),
+                               kernel=kernel),
+                     "stream", LANE_COMPUTE, deps=(i_io,))
 
         # ---- Phase III: C stays on device for chaining; final store of the
         # compressed output via the direct storage path.
-        t_store = tms.transfer(Path.GDS, MemoryTier.DEVICE, MemoryTier.STORAGE,
-                               int(mem.m_c), tag="phaseIII/C")
+        plan.add(TransferOp(Path.GDS, MemoryTier.DEVICE, MemoryTier.STORAGE,
+                            int(mem.m_c), tag="phaseIII/C"), "store", LANE_GDS)
+        return plan
 
-        m.io_modeled_s = sum(t.seconds for t in tms.transfers)
-        m.compute_modeled_s = sum(seg_cmp)
-        # Dual-way Phase I: the GDS load of B overlaps both the A load and
-        # the CPU-side RoBW pass (independent resources, Fig. 5).
-        phase1 = max(t_b, t_a + m.host_preprocess_s)
-        m.makespan_s = phase1 + phase2 + t_store
-        m.bytes_by_path = {p.value: b for p, b in tms.bytes_by_path().items()}
-        m.seconds_by_path = {p.value: s for p, s in tms.seconds_by_path().items()}
-        m.total_transfer_bytes = tms.total_bytes()
-        return ScheduleResult(x=out, metrics=m, plan=plan, mem=mem)
+    @staticmethod
+    def _segment_kernel(ell, seg, h):
+        """Execute-mode thunk: stream this segment through the Pallas
+        block-ELL kernel, writing its row slice of the output buffer."""
+        def kernel(out: np.ndarray) -> None:
+            from repro.kernels import bcsr_spmm as _spmm_op
+            import jax.numpy as jnp
+            x_seg = np.asarray(_spmm_op(ell, jnp.asarray(h)))
+            out[seg.row_start:seg.row_end] = x_seg[: seg.n_rows]
+        return kernel
+
+
+def _reference_kernel(a: CSR, h):
+    """Baseline execute mode: exact output via the dense reference path
+    (the baselines' correctness story is not the streamed pipeline)."""
+    def kernel() -> np.ndarray:
+        from repro.sparse.ref_spgemm import spgemm_csr_dense
+        return spgemm_csr_dense(a, np.asarray(h))
+    return kernel
 
 
 class MaxMemoryScheduler(_BaseScheduler):
@@ -306,43 +308,44 @@ class MaxMemoryScheduler(_BaseScheduler):
     Models the paper's MaxMemory baseline: equal static allocation for A and
     B on device; segments cut at byte budget regardless of row boundaries;
     partial rows bounce back to host for merging (measured numpy work) and
-    are re-transferred (modeled DMA) — the Fig. 3 overhead.
+    are re-transferred (modeled DMA) — the Fig. 3 overhead. The plan is one
+    fully **serial** phase: the baseline has no overlap.
     """
 
     name = "maxmemory"
     oom_fraction = 0.84  # Table III: dies one notch below Memory Req.
 
-    def run(self, a: CSR, h, mode="simulate", dataset="") -> ScheduleResult:
-        tms = TieredMemorySystem(self.spec)
+    def build_plan(self, a: CSR, h, mode="simulate",
+                   dataset="") -> PipelinePlan:
         feat = self._feat(h)
         f = feat.n_cols
-        m = ScheduleMetrics(scheduler=self.name, dataset=dataset)
+        plan = PipelinePlan(scheduler=self.name, dataset=dataset)
+        plan.phases = [PhaseSpec("all", overlap="serial")]
         h_bytes = feat.compressed_bytes
         half = self.device_budget // 2
         if h_bytes > half or self._budget_infeasible(a, feat):
-            m.oom = True  # static split cannot fit B / minimum set absent
-            return ScheduleResult(x=None, metrics=m)
-        try:
-            tms.alloc(MemoryTier.DEVICE, "H", h_bytes)
-            tms.alloc(MemoryTier.DEVICE, "A_seg", min(half, self.spec.device_capacity - h_bytes))
-        except OutOfMemory:
-            m.oom = True
-            return ScheduleResult(x=None, metrics=m)
+            plan.oom = True  # static split cannot fit B / minimum set absent
+            return plan
+        plan.add(AllocOp(MemoryTier.DEVICE, "H", h_bytes), "all")
+        plan.add(AllocOp(MemoryTier.DEVICE, "A_seg",
+                         min(half, self.spec.device_capacity - h_bytes)),
+                 "all")
 
         # B over PCIe through host (no GDS in baseline), serial with A.
-        tms.transfer(Path.STORAGE_HOST, MemoryTier.STORAGE, MemoryTier.HOST,
-                     h_bytes, tag="phaseI/H")
-        tms.transfer(Path.DMA, MemoryTier.HOST, MemoryTier.DEVICE, h_bytes,
-                     tag="phaseI/H")
-        tms.transfer(Path.STORAGE_HOST, MemoryTier.STORAGE, MemoryTier.HOST,
-                     a.nbytes(), tag="phaseI/A")
+        plan.add(TransferOp(Path.STORAGE_HOST, MemoryTier.STORAGE,
+                            MemoryTier.HOST, h_bytes, tag="phaseI/H"), "all")
+        plan.add(TransferOp(Path.DMA, MemoryTier.HOST, MemoryTier.DEVICE,
+                            h_bytes, tag="phaseI/H"), "all")
+        plan.add(TransferOp(Path.STORAGE_HOST, MemoryTier.STORAGE,
+                            MemoryTier.HOST, a.nbytes(), tag="phaseI/A"),
+                 "all")
 
         cuts = naive_partition(a, half)
-        m.segments = len(cuts)
-        total_cmp = 0.0
+        plan.segments = len(cuts)
         value_bytes = a.data.dtype.itemsize
         per_nnz = 4 + value_bytes
-        row_of = np.searchsorted(a.indptr, np.arange(a.nnz + 1), side="right") - 1
+        row_of = np.searchsorted(a.indptr, np.arange(a.nnz + 1),
+                                 side="right") - 1
         carry_vals = np.empty(0, dtype=a.data.dtype)
         for (lo, hi, first_partial, last_partial) in cuts:
             # Unaligned cut ⇒ every segment must be re-packed ("staged") into
@@ -353,9 +356,10 @@ class MaxMemoryScheduler(_BaseScheduler):
             t0 = time.perf_counter()
             staged_vals = np.ascontiguousarray(a.data[lo:hi])
             staged_idx = np.ascontiguousarray(a.indices[lo:hi])
-            m.host_measured_s += time.perf_counter() - t0
-            m.host_preprocess_s += self._host_seconds(
-                staged_vals.nbytes + staged_idx.nbytes, events=1)
+            measured = time.perf_counter() - t0
+            plan.add(HostPreprocessOp(
+                self._host_seconds(staged_vals.nbytes + staged_idx.nbytes,
+                                   events=1), measured_s=measured), "all")
             if first_partial and carry_vals.size:
                 # Merge the previous segment's partial row with its
                 # continuation on the host (measured), re-send.
@@ -365,17 +369,19 @@ class MaxMemoryScheduler(_BaseScheduler):
                 merged = merge_partial_rows(carry_vals,
                                             np.asarray(a.data[lo:row_end]))
                 np.ascontiguousarray(merged)  # pinned-buffer re-pack
-                m.host_measured_s += time.perf_counter() - t0
-                m.host_preprocess_s += self._host_seconds(
-                    2 * merged.nbytes, events=2)
-                m.merge_io_s += tms.transfer(
-                    Path.DMA, MemoryTier.HOST, MemoryTier.DEVICE,
-                    merged.size * per_nnz + f * 4, tag="merge/HtoD")
-                m.merge_events += 1
+                measured = time.perf_counter() - t0
+                plan.add(HostPreprocessOp(
+                    self._host_seconds(2 * merged.nbytes, events=2),
+                    measured_s=measured), "all")
+                plan.add(TransferOp(Path.DMA, MemoryTier.HOST,
+                                    MemoryTier.DEVICE,
+                                    merged.size * per_nnz + f * 4,
+                                    tag="merge/HtoD", merge=True), "all")
+                plan.merge_events += 1
             nbytes = (hi - lo) * per_nnz
-            tms.transfer(Path.DMA, MemoryTier.HOST, MemoryTier.DEVICE, nbytes,
-                         tag="seg")
-            total_cmp += self._spgemm_seconds(hi - lo, feat)
+            plan.add(TransferOp(Path.DMA, MemoryTier.HOST, MemoryTier.DEVICE,
+                                nbytes, tag="seg"), "all")
+            plan.add(ComputeOp(self._spgemm_seconds(hi - lo, feat)), "all")
             del staged_vals, staged_idx
             if last_partial:
                 # Incomplete row returns to host (values + partial result).
@@ -383,9 +389,9 @@ class MaxMemoryScheduler(_BaseScheduler):
                 row_lo = int(a.indptr[row])
                 carry_vals = np.asarray(a.data[row_lo:hi])
                 tail_bytes = carry_vals.size * per_nnz + f * 4
-                m.merge_io_s += tms.transfer(
-                    Path.DMA, MemoryTier.DEVICE, MemoryTier.HOST,
-                    tail_bytes, tag="merge/DtoH")
+                plan.add(TransferOp(Path.DMA, MemoryTier.DEVICE,
+                                    MemoryTier.HOST, tail_bytes,
+                                    tag="merge/DtoH", merge=True), "all")
             else:
                 carry_vals = np.empty(0, dtype=a.data.dtype)
 
@@ -398,37 +404,29 @@ class MaxMemoryScheduler(_BaseScheduler):
         c_slot = max(half - h_bytes, 1)
         n_spills = max(1, int(np.ceil(mem_full.m_c / c_slot)))
         thrash = min(n_spills, 3)
-        tms.transfer(Path.DMA, MemoryTier.DEVICE, MemoryTier.HOST,
-                     int(mem_full.m_c) * thrash, tag="spill/C")
+        plan.add(TransferOp(Path.DMA, MemoryTier.DEVICE, MemoryTier.HOST,
+                            int(mem_full.m_c) * thrash, tag="spill/C"), "all")
         if n_spills > 1:
             # Re-uploaded C partials that later segments accumulate into.
             reup = int(mem_full.m_c * 0.35 * (thrash - 1))
-            m.merge_io_s += tms.transfer(Path.DMA, MemoryTier.HOST,
-                                         MemoryTier.DEVICE, reup,
-                                         tag="spill/reup")
+            plan.add(TransferOp(Path.DMA, MemoryTier.HOST, MemoryTier.DEVICE,
+                                reup, tag="spill/reup", merge=True), "all")
             # Capacity pressure also evicts resident B pages; they re-read.
             b_evict = int(h_bytes * min(
                 1.0, 0.4 * max(0.0, (mem_full.m_c - c_slot)) / max(h_bytes, 1)))
             if b_evict:
-                tms.transfer(Path.STORAGE_HOST, MemoryTier.STORAGE,
-                             MemoryTier.HOST, b_evict, tag="evict/B")
-                tms.transfer(Path.DMA, MemoryTier.HOST, MemoryTier.DEVICE,
-                             b_evict, tag="evict/B")
-        out = None
+                plan.add(TransferOp(Path.STORAGE_HOST, MemoryTier.STORAGE,
+                                    MemoryTier.HOST, b_evict, tag="evict/B"),
+                         "all")
+                plan.add(TransferOp(Path.DMA, MemoryTier.HOST,
+                                    MemoryTier.DEVICE, b_evict,
+                                    tag="evict/B"), "all")
         if mode == "execute":
-            from repro.sparse.ref_spgemm import spgemm_csr_dense
-            out = spgemm_csr_dense(a, np.asarray(h))  # baseline correctness path
-        tms.transfer(Path.STORAGE_HOST, MemoryTier.HOST, MemoryTier.STORAGE,
-                     int(mem_full.m_c), tag="phaseIII/C")
-
-        m.io_modeled_s = sum(t.seconds for t in tms.transfers)
-        m.compute_modeled_s = total_cmp
-        # No overlap in the naive baseline: serial makespan.
-        m.makespan_s = m.io_modeled_s + m.host_preprocess_s + total_cmp
-        m.bytes_by_path = {p.value: b for p, b in tms.bytes_by_path().items()}
-        m.seconds_by_path = {p.value: s for p, s in tms.seconds_by_path().items()}
-        m.total_transfer_bytes = tms.total_bytes()
-        return ScheduleResult(x=out, metrics=m)
+            plan.reference_kernel = _reference_kernel(a, h)
+        plan.add(TransferOp(Path.STORAGE_HOST, MemoryTier.HOST,
+                            MemoryTier.STORAGE, int(mem_full.m_c),
+                            tag="phaseIII/C"), "all")
+        return plan
 
 
 class UCGScheduler(_BaseScheduler):
@@ -436,7 +434,8 @@ class UCGScheduler(_BaseScheduler):
 
     Table I: no alignment, no DMA batching, UM reads, no dual-way. UM
     page-fault traffic re-reads hot pages; a fraction of work runs on CPU
-    (dynamic balance) at CPU throughput.
+    (dynamic balance) at CPU throughput. Serial plan: UM serializes with
+    compute.
     """
 
     name = "ucg"
@@ -449,19 +448,22 @@ class UCGScheduler(_BaseScheduler):
         self.cpu_fraction = cpu_fraction
         self.um_refetch = um_refetch  # page-granularity over-fetch factor
 
-    def run(self, a: CSR, h, mode="simulate", dataset="") -> ScheduleResult:
-        tms = TieredMemorySystem(self.spec)
+    def build_plan(self, a: CSR, h, mode="simulate",
+                   dataset="") -> PipelinePlan:
         feat = self._feat(h)
         f = feat.n_cols
-        m = ScheduleMetrics(scheduler=self.name, dataset=dataset)
+        plan = PipelinePlan(scheduler=self.name, dataset=dataset)
+        plan.phases = [PhaseSpec("all", overlap="serial")]
         h_bytes = feat.compressed_bytes
         if self._budget_infeasible(a, feat):
             # UM spills, but a minimum resident set must fit (Table III '-').
-            m.oom = True
-            return ScheduleResult(x=None, metrics=m)
+            plan.oom = True
+            return plan
+        plan.segments = 1
 
-        tms.transfer(Path.STORAGE_HOST, MemoryTier.STORAGE, MemoryTier.HOST,
-                     a.nbytes() + h_bytes, tag="load")
+        plan.add(TransferOp(Path.STORAGE_HOST, MemoryTier.STORAGE,
+                            MemoryTier.HOST, a.nbytes() + h_bytes,
+                            tag="load"), "all")
         # UM moves A, H and C on demand. Page-granularity refetch grows as
         # the resident share shrinks: fewer pages stay cached, so evicted
         # pages refault — refetch ∝ working-set / budget.
@@ -470,30 +472,23 @@ class UCGScheduler(_BaseScheduler):
         refetch = self.um_refetch * max(
             1.0, 0.6 * working_set / max(self.device_budget, 1))
         um_bytes = int((a.nbytes() + h_bytes) * refetch)
-        tms.transfer(Path.UM, MemoryTier.HOST, MemoryTier.DEVICE, um_bytes,
-                     tag="um")
+        plan.add(TransferOp(Path.UM, MemoryTier.HOST, MemoryTier.DEVICE,
+                            um_bytes, tag="um"), "all", LANE_UM)
         dens_b = (100.0 - feat.sparsity_pct) / 100.0
         flops = max(_spgemm_flops(a, f) * dens_b, 2.0 * a.nnz)
         gpu_s = self._kernel_seconds(flops * (1 - self.cpu_fraction))
         cpu_s = flops * self.cpu_fraction / self.cpu_flops
-        total_cmp = max(gpu_s, cpu_s)  # CPU/GPU run concurrently
-        tms.transfer(Path.UM, MemoryTier.DEVICE, MemoryTier.HOST,
-                     int(mem_full.m_c * refetch / self.um_refetch), tag="out")
-        tms.transfer(Path.STORAGE_HOST, MemoryTier.HOST, MemoryTier.STORAGE,
-                     int(mem_full.m_c), tag="out")
-
-        out = None
+        # CPU/GPU run concurrently: one compute slot at the slower side.
+        plan.add(ComputeOp(max(gpu_s, cpu_s), flops=flops), "all")
+        plan.add(TransferOp(Path.UM, MemoryTier.DEVICE, MemoryTier.HOST,
+                            int(mem_full.m_c * refetch / self.um_refetch),
+                            tag="out"), "all", LANE_UM)
+        plan.add(TransferOp(Path.STORAGE_HOST, MemoryTier.HOST,
+                            MemoryTier.STORAGE, int(mem_full.m_c),
+                            tag="out"), "all")
         if mode == "execute":
-            from repro.sparse.ref_spgemm import spgemm_csr_dense
-            out = spgemm_csr_dense(a, np.asarray(h))
-        m.io_modeled_s = sum(t.seconds for t in tms.transfers)
-        m.compute_modeled_s = total_cmp
-        m.makespan_s = m.io_modeled_s + total_cmp  # UM serializes with compute
-        m.bytes_by_path = {p.value: b for p, b in tms.bytes_by_path().items()}
-        m.seconds_by_path = {p.value: s for p, s in tms.seconds_by_path().items()}
-        m.total_transfer_bytes = tms.total_bytes()
-        m.segments = 1
-        return ScheduleResult(x=out, metrics=m)
+            plan.reference_kernel = _reference_kernel(a, h)
+        return plan
 
 
 class ETCScheduler(_BaseScheduler):
@@ -503,6 +498,11 @@ class ETCScheduler(_BaseScheduler):
     allocated at the larger compressed input's size (paper §III-B), which
     shrinks the effective streaming budget; batch boundaries still split
     rows (merge cost remains, amortized by batching ~4x fewer events).
+
+    Plan shape: a serial "load" phase (Phase I loads, merge bounces, output
+    paging — ETC has no dual-way overlap for those) plus a "stream" phase
+    whose transfer ops depend on the *previous* compute op — the inter-batch
+    pipeline can only prefetch one batch ahead.
     """
 
     name = "etc"
@@ -513,11 +513,13 @@ class ETCScheduler(_BaseScheduler):
         self.dedup = dedup              # fraction of redundant transfer removed
         self.batch_amortize = batch_amortize
 
-    def run(self, a: CSR, h, mode="simulate", dataset="") -> ScheduleResult:
-        tms = TieredMemorySystem(self.spec)
+    def build_plan(self, a: CSR, h, mode="simulate",
+                   dataset="") -> PipelinePlan:
         feat = self._feat(h)
         f = feat.n_cols
-        m = ScheduleMetrics(scheduler=self.name, dataset=dataset)
+        plan = PipelinePlan(scheduler=self.name, dataset=dataset)
+        plan.phases = [PhaseSpec("load", overlap="serial"),
+                       PhaseSpec("stream")]
         h_bytes = feat.compressed_bytes
         out_alloc = max(a.nbytes(), h_bytes)  # sized to larger input (§III-B)
         a_budget = self.device_budget - h_bytes - out_alloc
@@ -526,19 +528,19 @@ class ETCScheduler(_BaseScheduler):
             # (extra spills below) and the stream budget shrinks to a floor.
             a_budget = max(int(0.05 * self.device_budget), 1 << 16)
         if self._budget_infeasible(a, feat):
-            m.oom = True
-            return ScheduleResult(x=None, metrics=m)
-        tms.transfer(Path.STORAGE_HOST, MemoryTier.STORAGE, MemoryTier.HOST,
-                     a.nbytes() + h_bytes, tag="load")
-        tms.transfer(Path.DMA, MemoryTier.HOST, MemoryTier.DEVICE, h_bytes,
-                     tag="phaseI/H")
+            plan.oom = True
+            return plan
+        plan.add(TransferOp(Path.STORAGE_HOST, MemoryTier.STORAGE,
+                            MemoryTier.HOST, a.nbytes() + h_bytes,
+                            tag="load"), "load")
+        plan.add(TransferOp(Path.DMA, MemoryTier.HOST, MemoryTier.DEVICE,
+                            h_bytes, tag="phaseI/H"), "load")
 
         cuts = naive_partition(a, int(a_budget))
-        m.segments = len(cuts)
+        plan.segments = len(cuts)
         value_bytes = a.data.dtype.itemsize
         per_nnz = 4 + value_bytes
-        seg_io, seg_cmp = [], []
-        merge_seg = 0
+        prev_cmp: Optional[int] = None
         for idx, (lo, hi, first_partial, last_partial) in enumerate(cuts):
             if idx % self.batch_amortize == 0:
                 # Batching amortizes the re-staging memcpy across
@@ -547,46 +549,35 @@ class ETCScheduler(_BaseScheduler):
                 t0 = time.perf_counter()
                 sv = np.ascontiguousarray(a.data[lo:hi])
                 si = np.ascontiguousarray(a.indices[lo:hi])
-                m.host_measured_s += time.perf_counter() - t0
-                m.host_preprocess_s += self._host_seconds(
-                    sv.nbytes + si.nbytes, events=1)
+                measured = time.perf_counter() - t0
+                plan.add(HostPreprocessOp(
+                    self._host_seconds(sv.nbytes + si.nbytes, events=1),
+                    measured_s=measured), "load")
             nbytes = int((hi - lo) * per_nnz * (1 - self.dedup * 0.25))
-            seg_io.append(tms.transfer(Path.DMA, MemoryTier.HOST,
-                                       MemoryTier.DEVICE, nbytes, tag="seg"))
-            seg_cmp.append(self._spgemm_seconds(hi - lo, feat))
+            i_io = plan.add(
+                TransferOp(Path.DMA, MemoryTier.HOST, MemoryTier.DEVICE,
+                           nbytes, tag="seg"), "stream", LANE_DMA,
+                deps=(() if prev_cmp is None else (prev_cmp,)))
+            prev_cmp = plan.add(
+                ComputeOp(self._spgemm_seconds(hi - lo, feat)),
+                "stream", LANE_COMPUTE, deps=(i_io,))
             if last_partial and idx % self.batch_amortize == 0:
-                m.merge_io_s += tms.transfer(
-                    Path.DMA, MemoryTier.DEVICE, MemoryTier.HOST,
-                    f * 4 + 64 * per_nnz, tag="merge/DtoH")
-                m.merge_events += 1
+                plan.add(TransferOp(Path.DMA, MemoryTier.DEVICE,
+                                    MemoryTier.HOST, f * 4 + 64 * per_nnz,
+                                    tag="merge/DtoH", merge=True), "load")
+                plan.merge_events += 1
 
-        # Inter-batch pipeline: IO overlaps compute (like AIRES Phase II).
-        pipeline, io_free = 0.0, 0.0
-        for io_s, cmp_s in zip(seg_io, seg_cmp):
-            start = max(io_free, pipeline)
-            io_done = start + io_s
-            pipeline = max(pipeline, io_done) + cmp_s
-            io_free = io_done
         # Output paging: C exits via DMA; if the reserved out_alloc is under
         # M_C, the overflow pages out mid-stream as well (no GDS in ETC).
         mem_full = plan_memory_unified(a, feat, m_total=float("inf"))
-        tms.transfer(Path.DMA, MemoryTier.DEVICE, MemoryTier.HOST,
-                     int(mem_full.m_c), tag="out")
-        tms.transfer(Path.STORAGE_HOST, MemoryTier.HOST, MemoryTier.STORAGE,
-                     int(mem_full.m_c), tag="out")
-
-        out = None
+        plan.add(TransferOp(Path.DMA, MemoryTier.DEVICE, MemoryTier.HOST,
+                            int(mem_full.m_c), tag="out"), "load")
+        plan.add(TransferOp(Path.STORAGE_HOST, MemoryTier.HOST,
+                            MemoryTier.STORAGE, int(mem_full.m_c),
+                            tag="out"), "load")
         if mode == "execute":
-            from repro.sparse.ref_spgemm import spgemm_csr_dense
-            out = spgemm_csr_dense(a, np.asarray(h))
-        m.io_modeled_s = sum(t.seconds for t in tms.transfers)
-        m.compute_modeled_s = sum(seg_cmp)
-        load_s = sum(t.seconds for t in tms.transfers if t.tag != "seg")
-        m.makespan_s = load_s + m.host_preprocess_s + pipeline
-        m.bytes_by_path = {p.value: b for p, b in tms.bytes_by_path().items()}
-        m.seconds_by_path = {p.value: s for p, s in tms.seconds_by_path().items()}
-        m.total_transfer_bytes = tms.total_bytes()
-        return ScheduleResult(x=out, metrics=m)
+            plan.reference_kernel = _reference_kernel(a, h)
+        return plan
 
 
 SCHEDULERS = {

@@ -24,6 +24,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.memory_model import FeatureSpec, plan_memory_unified
+from repro.core.pipeline import (
+    LANE_COMPUTE,
+    LANE_DMA,
+    CacheProbeOp,
+    ComputeOp,
+    ExecuteInterpreter,
+    PhaseSpec,
+    PipelinePlan,
+    ScheduleMetrics,
+    TransferOp,
+    modeled_spgemm_seconds,
+)
 from repro.core.robw import (
     robw_partition,
     robw_transpose_plan,
@@ -31,15 +43,13 @@ from repro.core.robw import (
 )
 from repro.core.scheduler import (
     AiresScheduler,
-    ScheduleMetrics,
-    ScheduleResult,
     SCHEDULERS,
 )
 from repro.io.segment_cache import SegmentKey, TieredSegmentCache
 from repro.io.shard_cache import ShardedSegmentCache
-from repro.io.streamer import DoubleBufferedStreamer, StreamStats
-from repro.io.tiers import TierSpec, TPU_V5E_SYSTEM
-from repro.sparse.formats import CSR
+from repro.io.streamer import StreamStats
+from repro.io.tiers import MemoryTier, Path, TierSpec, TPU_V5E_SYSTEM
+from repro.sparse.formats import CSR, csr_fingerprint
 
 # Both tiered caches speak the same get/put protocol; the engine and the
 # epoch runner accept either (mesh-sharded device tier included).
@@ -107,7 +117,7 @@ class AiresSpGEMM:
         # the device_put entirely — see StreamStats.cache_hit_bytes.
         self.segment_cache = segment_cache
         self._prepared: Dict[tuple, _Prepared] = {}
-        self._transposes: Dict[tuple, Tuple[CSR, CSR]] = {}
+        self._transposes: Dict[tuple, CSR] = {}
         self.forward_stats_log: List[StreamStats] = []
         self.backward_stats_log: List[StreamStats] = []
         self.last_stream_stats: Optional[StreamStats] = None
@@ -140,31 +150,37 @@ class AiresSpGEMM:
     @staticmethod
     def graph_cache_prefix(a: CSR) -> str:
         """Identity prefix shared by every segment-cache namespace this
-        engine derives for `a` (any direction, plan width, or budget)."""
-        return f"g{id(a)}:{a.nnz}:{a.shape[0]}x{a.shape[1]}"
+        engine derives for `a` (any direction, plan width, or budget).
+
+        Content-addressed (`csr_fingerprint`), not ``id(a)``: ids are
+        recycled after GC, and a stable prefix is what lets checkpointed
+        bricks warm-start a *fresh* process's cache (the keys survive)."""
+        return f"g{csr_fingerprint(a)}:{a.nnz}:{a.shape[0]}x{a.shape[1]}"
 
     # ---- host-side preparation (cached per graph × feature shape) --------
     #
-    # CSR inputs are treated as IMMUTABLE: the cache key covers identity and
-    # structure (id, nnz, shape), not values, so mutating a.data in place
-    # between calls would serve stale densified tiles. Re-weighted graphs
-    # must be new CSR objects (or call clear_cache()).
+    # CSR inputs are treated as IMMUTABLE: the cache keys are content
+    # fingerprints (structure AND values), but the fingerprint itself is
+    # memoized on the instance, so mutating a CSR in place between calls
+    # would serve stale densified tiles. Re-weighted graphs must be new CSR
+    # objects (they then fingerprint — and cache — separately).
 
     def transpose_of(self, a: CSR) -> CSR:
         """Memoized Aᵀ — shared by backward streaming and epoch accounting.
 
-        Entries hold a reference to their source CSR, so an id() can never
-        be recycled into a stale hit while the entry lives; the memo is
+        Content-addressed (`csr_fingerprint`, values included), never
+        id(a): ids are recycled after GC, and this memo holds no reference
+        to its source graph that would keep the id alive. The memo is
         LRU-bounded like `_prepared`.
         """
-        key = (id(a), a.nnz, a.shape)
+        key = (csr_fingerprint(a), a.nnz, a.shape)
         hit = self._transposes.pop(key, None)
-        if hit is not None and hit[0] is a:
+        if hit is not None:
             self._transposes[key] = hit  # re-insert: most-recently-used
-            return hit[1]
+            return hit
         from repro.sparse.formats import csr_transpose
         a_t = csr_transpose(a)
-        self._transposes[key] = (a, a_t)
+        self._transposes[key] = a_t
         while len(self._transposes) > self.PREPARED_CACHE_MAX:
             self._transposes.pop(next(iter(self._transposes)))
         return a_t
@@ -178,7 +194,7 @@ class AiresSpGEMM:
         # every width up to plan_features.
         plan_shape = (dense_shape[0],
                       max(cfg.plan_features or 0, dense_shape[1]))
-        key = (id(a), a.nnz, a.shape, plan_shape, transpose)
+        key = (csr_fingerprint(a), a.nnz, a.shape, plan_shape, transpose)
         hit = self._prepared.pop(key, None)
         if hit is not None:
             self._prepared[key] = hit  # re-insert: most-recently-used
@@ -219,24 +235,79 @@ class AiresSpGEMM:
             self._prepared.pop(next(iter(self._prepared)))
         return prepared
 
-    # ---- streaming executors --------------------------------------------
+    # ---- pipeline-plan building + streaming executors --------------------
 
-    def _stream(self, prepared: _Prepared, consume_one: Callable) -> tuple:
-        """Run one double-buffered pass over `prepared`'s segments.
+    @staticmethod
+    def device_payload(ell):
+        """Upload one BlockELL brick — the device-resident payload format
+        shared by the streamer, the segment cache, and engine warm-start."""
+        return (
+            jax.device_put(jnp.asarray(ell.blocks)),
+            jax.device_put(jnp.asarray(ell.col_tile)),
+            jax.device_put(jnp.asarray(ell.n_tiles)),
+            ell,
+        )
+
+    def _build_stream_plan(self, prepared: _Prepared,
+                           feat: Optional[FeatureSpec] = None,
+                           spec: Optional[TierSpec] = None) -> PipelinePlan:
+        """Phase II of one streamed pass as a `PipelinePlan`.
+
+        The same plan serves both interpreters: `ExecuteInterpreter.stream`
+        drives the attached `(i, ell)` payloads through the double-buffered
+        streamer for real, and `PipelinePlan.estimate()` reads the modeled
+        cost (cache probes peek, never mutate) — that is what the serving
+        engine's admission control prices a request with.
+        """
+        cfg = self.config
+        spec = spec if spec is not None else TPU_V5E_SYSTEM
+        if feat is None:
+            feat = FeatureSpec(prepared.a.shape[0],
+                               cfg.plan_features or 1, 4, 0.0)
+        plan = PipelinePlan(scheduler="aires-stream")
+        plan.phases = [PhaseSpec("stream")]
+        plan.mem = prepared.mem
+        plan.robw = prepared.plan
+        plan.segments = len(prepared.ells)
+        cached = self.segment_cache is not None
+        for i, (seg, ell) in enumerate(zip(prepared.segs, prepared.ells)):
+            nbytes = ell.nbytes()
+            miss = TransferOp(Path.DMA, MemoryTier.HOST, MemoryTier.DEVICE,
+                              nbytes, tag="phaseII/seg", payload=(i, ell))
+            if cached:
+                key = SegmentKey(prepared.cache_ns, i, cfg.wire_format,
+                                 tuple(ell.blocks.shape))
+                i_io = plan.add(CacheProbeOp(key, nbytes, miss,
+                                             payload=(i, ell)),
+                                "stream", LANE_DMA)
+            else:
+                i_io = plan.add(miss, "stream", LANE_DMA)
+            plan.add(ComputeOp(modeled_spgemm_seconds(seg.nnz, feat, spec)),
+                     "stream", LANE_COMPUTE, deps=(i_io,))
+        return plan
+
+    def stream_plan(self, a: CSR, h_shape, spec: Optional[TierSpec] = None,
+                    transpose: bool = False) -> PipelinePlan:
+        """Plan (and prepare) one streamed pass of `a` at `h_shape`."""
+        h_shape = tuple(int(s) for s in h_shape)
+        feat = FeatureSpec(h_shape[0], h_shape[1], 4, 0.0)
+        prepared = self._prepare(a, h_shape, transpose)
+        return self._build_stream_plan(prepared, feat=feat, spec=spec)
+
+    def _stream(self, prepared: _Prepared, consume_one: Callable,
+                feat: Optional[FeatureSpec] = None) -> tuple:
+        """Run one double-buffered pass over `prepared`'s segments via the
+        execute interpreter.
 
         consume_one(ell_dev, i) -> per-segment device result. Returns
         (row-concatenated output, StreamStats).
         """
         cfg = self.config
+        plan = self._build_stream_plan(prepared, feat=feat)
 
         def upload(payload):
             _, ell = payload
-            return (
-                jax.device_put(jnp.asarray(ell.blocks)),
-                jax.device_put(jnp.asarray(ell.col_tile)),
-                jax.device_put(jnp.asarray(ell.n_tiles)),
-                ell,
-            )
+            return self.device_payload(ell)
 
         def consume(dev_payload, i):
             blocks, col_tile, n_tiles, ell = dev_payload
@@ -245,28 +316,13 @@ class AiresSpGEMM:
             return consume_one(ell_dev, i)
 
         cache = self.segment_cache
-        cache_lookup = cache_store = None
-        if cache is not None:
-            def _key(payload):
-                i, ell = payload
-                return SegmentKey(prepared.cache_ns, i, cfg.wire_format,
-                                  tuple(ell.blocks.shape))
-
-            def cache_lookup(payload):
-                return cache.get(_key(payload), nbytes=payload[1].nbytes())
-
-            def cache_store(payload, dev):
-                cache.put(_key(payload), dev, payload[1].nbytes())
-
-        streamer = DoubleBufferedStreamer(
-            upload, consume, depth=cfg.stream_depth,
-            deadline_s=cfg.straggler_deadline_s,
-            payload_nbytes=lambda payload: payload[1].nbytes(),
-            cache_lookup=cache_lookup, cache_store=cache_store)
         # Copy, not alias: TieredSegmentCache.stats mutates in place.
         before = (dataclasses.replace(cache.stats)
                   if cache is not None else None)
-        parts = streamer.run_all(list(enumerate(prepared.ells)))
+        interp = ExecuteInterpreter(segment_cache=cache)
+        parts, stats = interp.stream(
+            plan, upload, consume, depth=cfg.stream_depth,
+            deadline_s=cfg.straggler_deadline_s)
         if cache is not None:
             # Host-tier hits re-crossed the bus via device_put promotions;
             # surface them so uploaded_bytes=0 can't misread as zero traffic.
@@ -274,14 +330,14 @@ class AiresSpGEMM:
             # serves (cache directory). `cache.stats` may be a recomputed
             # aggregate (ShardedSegmentCache), so snapshot-and-diff.
             after = cache.stats
-            streamer.stats.promoted_bytes = (
+            stats.promoted_bytes = (
                 after.promoted_bytes - before.promoted_bytes)
-            streamer.stats.ici_bytes = after.ici_bytes - before.ici_bytes
-            streamer.stats.directory_hit_bytes = (
+            stats.ici_bytes = after.ici_bytes - before.ici_bytes
+            stats.directory_hit_bytes = (
                 after.directory_hit_bytes - before.directory_hit_bytes)
         out = jnp.concatenate(
             [p[: s.n_rows] for p, s in zip(parts, prepared.segs)], axis=0)
-        return out, streamer.stats
+        return out, stats
 
     def _stream_spmm(self, prepared: _Prepared, dense) -> tuple:
         """X = stream(A) @ dense — shared by forward and transposed passes."""
@@ -289,10 +345,12 @@ class AiresSpGEMM:
 
         cfg = self.config
         dense_dev = jax.device_put(dense)  # Phase I: resident feature matrix
+        feat = FeatureSpec(int(dense.shape[0]), int(dense.shape[1]), 4, 0.0)
         return self._stream(
             prepared,
             lambda ell_dev, i: bcsr_spmm(ell_dev, dense_dev,
-                                         interpret=cfg.interpret))
+                                         interpret=cfg.interpret),
+            feat=feat)
 
     # ---- differentiable public API --------------------------------------
 

@@ -302,6 +302,22 @@ class TieredSegmentCache:
             self._host_used = 0
             self._pins.clear()
 
+    def export_entries(self) -> list:
+        """Snapshot every live entry as (key, host-form value, wire bytes).
+
+        Device-tier entries are demoted to host form (bit-identical numpy
+        copies) *without* being evicted — this is the read path for brick
+        checkpointing (`ServingEngine.checkpoint_cache`), so a serving
+        process can persist its warm cache and a successor can
+        `warm_start()` from it.
+        """
+        with self._lock:
+            out = [(key, self._demote(e.value), e.nbytes)
+                   for key, e in self._device.items()]
+            out.extend((key, e.value, e.nbytes)
+                       for key, e in self._host.items())
+            return out
+
     # ---- the cache protocol ----------------------------------------------
 
     def get(self, key: SegmentKey, nbytes: int = 0,
@@ -362,6 +378,31 @@ class TieredSegmentCache:
             self.stats.misses += 1
             self.stats.miss_bytes += nbytes
             return None, 0.0
+
+    def peek_cost(self, key: SegmentKey, nbytes: int = 0,
+                  tms: Optional[TieredMemorySystem] = None
+                  ) -> Tuple[bool, float]:
+        """Price a `get_with_cost` WITHOUT performing it: no promotion, no
+        LRU reorder, no stats. Returns (would_hit, modeled_seconds); the
+        promotion a host-tier or directory-peer hit would pay is charged to
+        `tms` (pass the estimate's own fresh tms — the default `self.tms`
+        is this cache's live accounting). This is the cache's half of
+        `PipelinePlan.estimate()`: the pricing stays next to the code that
+        really charges it (`get_with_cost`), so the two cannot drift."""
+        tier = self.tier_of(key)
+        if tier is MemoryTier.DEVICE:
+            return True, 0.0
+        if tier is MemoryTier.HOST:
+            return True, self._charge(tms, MemoryTier.HOST,
+                                      MemoryTier.DEVICE, nbytes,
+                                      "cache/promote")
+        if self.directory is not None:
+            holder = self.directory.holder(key)
+            if holder is not None and holder != self.worker_id:
+                return True, self._charge(tms, MemoryTier.HOST,
+                                          MemoryTier.DEVICE, nbytes,
+                                          "cache/peer-promote")
+        return False, 0.0
 
     def put(self, key: SegmentKey, value: Any, nbytes: int,
             tms: Optional[TieredMemorySystem] = None,

@@ -212,6 +212,15 @@ class ShardedSegmentCache:
         for shard in self.shards:
             shard.clear()
 
+    def export_entries(self) -> list:
+        """Snapshot of every shard's entries (see
+        `TieredSegmentCache.export_entries`); shard order, so a re-import
+        lands each brick back on its deterministic owner."""
+        out = []
+        for shard in self.shards:
+            out.extend(shard.export_entries())
+        return out
+
     # ---- the cache protocol ----------------------------------------------
 
     def get(self, key: SegmentKey, nbytes: int = 0,
@@ -233,6 +242,19 @@ class ShardedSegmentCache:
                 value = _place(value, self.devices[self.local_shard])
         self.last_get_transfer_s = cost
         return value, cost
+
+    def peek_cost(self, key: SegmentKey, nbytes: int = 0,
+                  tms: Optional[TieredMemorySystem] = None):
+        """Price a get WITHOUT performing it (see
+        `TieredSegmentCache.peek_cost`). A remote-owned key adds the ICI
+        hop a hit would ride — or, on a miss, the shard-place ship the
+        subsequent put() would pay."""
+        s = shard_of(key, self.n_shards)
+        hit, cost = self.shards[s].peek_cost(key, nbytes=nbytes, tms=tms)
+        if s != self.local_shard:
+            cost += self._charge_ici(
+                tms, nbytes, "cache/ici" if hit else "cache/shard-place")
+        return hit, cost
 
     def put(self, key: SegmentKey, value: Any, nbytes: int,
             tms: Optional[TieredMemorySystem] = None,

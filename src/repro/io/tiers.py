@@ -108,12 +108,20 @@ class TieredMemorySystem:
     schedulers can compute overlapped makespans, Fig. 5).
     """
 
-    def __init__(self, spec: TierSpec):
+    def __init__(self, spec: TierSpec, keep_records: bool = True):
         self.spec = spec
         self.used: Dict[MemoryTier, int] = {t: 0 for t in MemoryTier}
         self.allocs: Dict[Tuple[MemoryTier, str], int] = {}
+        # Per-transfer records power the schedulers' fine-grained breakdowns
+        # (one fresh tms per run). Long-lived accounting (a ServingEngine's
+        # lifetime tms) sets keep_records=False: only the bounded per-path
+        # aggregates below grow, never an unbounded record list.
+        self.keep_records = keep_records
         self.transfers: List[TransferRecord] = []
         self.busy_s: Dict[Path, float] = defaultdict(float)
+        self._bytes_by_path: Dict[Path, int] = defaultdict(int)
+        self._seconds_by_path: Dict[Path, float] = defaultdict(float)
+        self._total_bytes = 0
 
     # ---- allocation -----------------------------------------------------
     def _capacity(self, tier: MemoryTier) -> int:
@@ -145,25 +153,24 @@ class TieredMemorySystem:
                  nbytes: int, tag: str = "") -> float:
         bw = self.spec.bw[path]
         secs = self.spec.latency_s[path] + nbytes / bw
-        self.transfers.append(TransferRecord(path, src, dst, nbytes, secs, tag))
+        if self.keep_records:
+            self.transfers.append(
+                TransferRecord(path, src, dst, nbytes, secs, tag))
         self.busy_s[path] += secs
+        self._bytes_by_path[path] += nbytes
+        self._seconds_by_path[path] += secs
+        self._total_bytes += nbytes
         return secs
 
     # ---- reporting (Fig. 7 / Fig. 8) ------------------------------------
     def bytes_by_path(self) -> Dict[Path, int]:
-        out: Dict[Path, int] = defaultdict(int)
-        for t in self.transfers:
-            out[t.path] += t.nbytes
-        return dict(out)
+        return dict(self._bytes_by_path)
 
     def seconds_by_path(self) -> Dict[Path, float]:
-        out: Dict[Path, float] = defaultdict(float)
-        for t in self.transfers:
-            out[t.path] += t.seconds
-        return dict(out)
+        return dict(self._seconds_by_path)
 
     def total_bytes(self) -> int:
-        return sum(t.nbytes for t in self.transfers)
+        return self._total_bytes
 
     def makespan_overlapped(self) -> float:
         """Dual-way makespan: independent channels run concurrently."""
@@ -176,3 +183,6 @@ class TieredMemorySystem:
     def reset_accounting(self) -> None:
         self.transfers.clear()
         self.busy_s.clear()
+        self._bytes_by_path.clear()
+        self._seconds_by_path.clear()
+        self._total_bytes = 0

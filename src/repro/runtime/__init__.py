@@ -2,12 +2,12 @@ from repro.runtime.supervisor import (
     Supervisor, SupervisorConfig, ElasticMesh, RunState,
 )
 from repro.runtime.engine import (
-    BatchReport, EngineConfig, InferenceRequest, InferenceResult,
-    ServingEngine,
+    AdmissionError, BatchReport, EngineConfig, InferenceRequest,
+    InferenceResult, RejectedRequest, ServingEngine, WarmStartReport,
 )
 
 __all__ = [
     "Supervisor", "SupervisorConfig", "ElasticMesh", "RunState",
-    "BatchReport", "EngineConfig", "InferenceRequest", "InferenceResult",
-    "ServingEngine",
+    "AdmissionError", "BatchReport", "EngineConfig", "InferenceRequest",
+    "InferenceResult", "RejectedRequest", "ServingEngine", "WarmStartReport",
 ]

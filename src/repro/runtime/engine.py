@@ -34,14 +34,26 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 import jax.numpy as jnp
 
+from repro.checkpoint.checkpointer import (
+    load_segment_bricks,
+    save_segment_bricks,
+)
 from repro.core.spgemm import AiresConfig, AiresSpGEMM
 from repro.io.segment_cache import (
     CacheDirectory,
     CacheStats,
+    SegmentKey,
     TieredSegmentCache,
 )
 from repro.io.shard_cache import ShardedSegmentCache
-from repro.sparse.formats import CSR
+from repro.io.tiers import (
+    MemoryTier,
+    Path,
+    TieredMemorySystem,
+    TierSpec,
+    TPU_V5E_SYSTEM,
+)
+from repro.sparse.formats import CSR, BlockELL
 
 
 @dataclasses.dataclass
@@ -73,16 +85,33 @@ class EngineConfig:
     stream_depth: int = 2
     straggler_deadline_s: Optional[float] = None
     interpret: Optional[bool] = None
+    # Cost model used for admission control and warm-start accounting: the
+    # engine prices each request with `PipelinePlan.estimate()` under this
+    # TierSpec before it is allowed onto the queue.
+    tier_spec: TierSpec = TPU_V5E_SYSTEM
+    # Admission control: reject a submit() once the estimated cost of the
+    # already-queued requests plus the new one exceeds this many modeled
+    # seconds (None = unbounded queue, the pre-admission behavior).
+    max_queue_cost_s: Optional[float] = None
 
 
 @dataclasses.dataclass
 class InferenceRequest:
-    """One GCN inference against a registered graph."""
+    """One GCN inference against a registered graph.
+
+    `deadline_s` is a relative deadline: the request must *finish* within
+    that many wall seconds of submit(). Submission rejects requests whose
+    modeled cost alone already exceeds the deadline (infeasible), and
+    run_batch() expires requests whose deadline passed while queued.
+    """
 
     graph: str
     features: np.ndarray                  # (n_nodes, F)
     weights: Sequence[np.ndarray] = ()    # per-layer (F_in, F_out) chain
     request_id: int = -1                  # assigned by submit()
+    deadline_s: Optional[float] = None
+    submitted_s: float = -1.0             # monotonic stamp set by submit()
+    estimated_cost_s: float = 0.0         # modeled cost set by submit()
 
 
 @dataclasses.dataclass
@@ -90,6 +119,40 @@ class InferenceResult:
     request_id: int
     graph: str
     output: np.ndarray
+
+
+@dataclasses.dataclass
+class RejectedRequest:
+    """Admission-control verdict for a request that never joined the queue
+    (or expired on it). Reported in the next BatchReport."""
+
+    graph: str
+    reason: str                    # "deadline-infeasible" | "queue-full"
+    estimated_cost_s: float
+    deadline_s: Optional[float] = None
+    request_id: int = -1           # -1: rejected before an id was assigned
+
+
+class AdmissionError(RuntimeError):
+    """submit() refused a request; `.decision` carries the verdict."""
+
+    def __init__(self, decision: RejectedRequest):
+        self.decision = decision
+        super().__init__(
+            f"request on graph {decision.graph!r} rejected "
+            f"({decision.reason}): estimated cost "
+            f"{decision.estimated_cost_s:.3g}s"
+            + (f" vs deadline {decision.deadline_s:.3g}s"
+               if decision.deadline_s is not None else ""))
+
+
+@dataclasses.dataclass
+class WarmStartReport:
+    """What warm_start() restored into the segment cache."""
+
+    bricks: int = 0
+    wire_bytes: int = 0
+    modeled_seconds: float = 0.0   # storage→host + host→device, via the tms
 
 
 @dataclasses.dataclass
@@ -111,6 +174,11 @@ class BatchReport:
     # holds the brick. 0 with no directory attached.
     directory_hit_bytes: int = 0
     duplicate_avoided_bytes: int = 0
+    # Admission control: requests rejected at submit() since the previous
+    # report, and queued requests whose deadline expired before this batch
+    # ran them.
+    rejected: List[RejectedRequest] = dataclasses.field(default_factory=list)
+    expired: List[RejectedRequest] = dataclasses.field(default_factory=list)
 
     @property
     def bus_bytes(self) -> int:
@@ -147,6 +215,13 @@ class ServingEngine:
                  mesh=None):
         self.config = config
         self.directory = directory
+        # All modeled I/O this engine performs outside a stream's own
+        # accounting window — cache demote/promote churn, warm-start loads —
+        # lands here, so `tms.bytes_by_path()` stays honest from the first
+        # epoch (the warm-start bricks did cross sio+dma once).
+        # keep_records=False: a serving process lives for days; only the
+        # bounded per-path aggregates may grow, never a per-transfer log.
+        self.tms = TieredMemorySystem(config.tier_spec, keep_records=False)
         self.cache: Optional["TieredSegmentCache | ShardedSegmentCache"] = None
         if not config.cache_enabled and (directory is not None
                                          or mesh is not None):
@@ -164,23 +239,27 @@ class ServingEngine:
             if mesh is not None:
                 self.cache = ShardedSegmentCache.from_mesh(
                     mesh, device_bytes, axis=config.cache_shard_axis,
-                    host_budget_bytes=config.cache_host_bytes,
+                    host_budget_bytes=config.cache_host_bytes, tms=self.tms,
                     directory=directory, worker_id=config.worker_id)
             elif config.cache_shards > 1:
                 self.cache = ShardedSegmentCache(
                     device_budget_bytes=device_bytes,
                     host_budget_bytes=config.cache_host_bytes,
-                    n_shards=config.cache_shards,
+                    n_shards=config.cache_shards, tms=self.tms,
                     directory=directory, worker_id=config.worker_id)
             else:
                 self.cache = TieredSegmentCache(
                     device_budget_bytes=device_bytes,
-                    host_budget_bytes=config.cache_host_bytes,
+                    host_budget_bytes=config.cache_host_bytes, tms=self.tms,
                     directory=directory, worker_id=config.worker_id)
         self._graphs: "OrderedDict[str, CSR]" = OrderedDict()
         self._engines: Dict[str, AiresSpGEMM] = {}
         self._queue: List[InferenceRequest] = []
         self._next_id = 0
+        # Admission-control state: memoized per-(graph, width) pass cost
+        # estimates, and the verdicts awaiting their BatchReport.
+        self._pass_costs: Dict[tuple, float] = {}
+        self._rejected: List[RejectedRequest] = []
 
     # ---- graph registry --------------------------------------------------
 
@@ -209,6 +288,8 @@ class ServingEngine:
         against it — which are returned so the caller can re-route them."""
         a = self._graphs.pop(name, None)
         self._engines.pop(name, None)
+        self._pass_costs = {k: v for k, v in self._pass_costs.items()
+                            if k[0] != name}
         if a is not None and self.cache is not None:
             self.cache.invalidate_prefix(AiresSpGEMM.graph_cache_prefix(a))
         orphaned = [r for r in self._queue if r.graph == name]
@@ -222,6 +303,111 @@ class ServingEngine:
     def cache_stats(self) -> Optional[CacheStats]:
         return self.cache.stats if self.cache is not None else None
 
+    # ---- brick checkpointing + warm start --------------------------------
+    #
+    # Cache keys are content-addressed (csr_fingerprint namespaces), so the
+    # bricks one serving process checkpoints are the bricks the next
+    # process's streams will look up — warm start survives restarts.
+
+    def checkpoint_cache(self, directory: str, step: int = 0) -> str:
+        """Persist the segment cache's bricks (both tiers) for warm_start.
+
+        Only engine-format entries — the `(blocks, col_tile, n_tiles, ell)`
+        device payload `AiresSpGEMM` streams — are checkpointed; anything
+        else sharing the cache is skipped.
+        """
+        if self.cache is None:
+            raise ValueError("cache_enabled=False: nothing to checkpoint")
+        bricks = []
+        for key, value, nbytes in self.cache.export_entries():
+            if not (isinstance(value, tuple) and len(value) == 4
+                    and isinstance(value[3], BlockELL)):
+                continue
+            ell = value[3]
+            meta = {
+                "graph_id": key.graph_id,
+                "segment_id": key.segment_id,
+                "wire_format": key.wire_format,
+                "shape": list(key.shape),
+                "nbytes": int(nbytes),
+                "bm": ell.bm, "bk": ell.bk,
+                "n_rows": ell.n_rows, "n_cols": ell.n_cols,
+            }
+            bricks.append((meta, {"blocks": np.asarray(ell.blocks),
+                                  "col_tile": np.asarray(ell.col_tile),
+                                  "n_tiles": np.asarray(ell.n_tiles)}))
+        return save_segment_bricks(directory, bricks, step=step)
+
+    def warm_start(self, checkpoint_dir: str) -> WarmStartReport:
+        """Pre-populate the segment cache from checkpointed bricks.
+
+        Every restored brick is charged through the engine's
+        `TieredMemorySystem` — one storage→host read plus one host→device
+        upload — so the first epoch's `tms.bytes_by_path()` stays honest:
+        warm-started bricks were not free, they crossed the bus before the
+        first request arrived (just not inside any request's latency).
+        """
+        if self.cache is None:
+            raise ValueError("cache_enabled=False contradicts warm_start")
+        report = WarmStartReport()
+        for meta, arrays in load_segment_bricks(checkpoint_dir):
+            ell = BlockELL(
+                blocks=arrays["blocks"], col_tile=arrays["col_tile"],
+                n_tiles=arrays["n_tiles"], bm=int(meta["bm"]),
+                bk=int(meta["bk"]), n_rows=int(meta["n_rows"]),
+                n_cols=int(meta["n_cols"]))
+            key = SegmentKey(meta["graph_id"], meta["segment_id"],
+                             meta["wire_format"], tuple(meta["shape"]))
+            nbytes = int(meta["nbytes"])
+            report.modeled_seconds += self.tms.transfer(
+                Path.STORAGE_HOST, MemoryTier.STORAGE, MemoryTier.HOST,
+                nbytes, tag="warmstart/load")
+            report.modeled_seconds += self.tms.transfer(
+                Path.DMA, MemoryTier.HOST, MemoryTier.DEVICE,
+                nbytes, tag="warmstart/promote")
+            self.cache.put(key, AiresSpGEMM.device_payload(ell), nbytes,
+                           tms=self.tms)
+            report.bricks += 1
+            report.wire_bytes += nbytes
+        return report
+
+    # ---- admission control (satellite of the pipeline-IR tentpole) -------
+
+    def _pass_cost(self, name: str, width: int) -> float:
+        """Modeled makespan of one streamed aggregation pass at `width`,
+        via the engine's own `PipelinePlan.estimate()` (cold-cache reading:
+        admission must hold even if the cache is evicted underneath the
+        queue). Memoized — the plan is pinned per graph, so the estimate
+        only varies with the feature width."""
+        key = (name, int(width))
+        if key not in self._pass_costs:
+            a = self._graphs[name]
+            plan = self._engines[name].stream_plan(
+                a, (a.n_rows, int(width)), spec=self.config.tier_spec)
+            self._pass_costs[key] = plan.estimate(
+                self.config.tier_spec).makespan_s
+        return self._pass_costs[key]
+
+    def estimate_request_cost(self, request: InferenceRequest) -> float:
+        """Modeled seconds to serve `request`: one streamed pass per layer,
+        each at that layer's activation width."""
+        widths = [int(request.features.shape[1])]
+        for w in list(request.weights)[:-1]:
+            widths.append(int(w.shape[1]))
+        return sum(self._pass_cost(request.graph, wd) for wd in widths)
+
+    def queued_cost_s(self) -> float:
+        """Estimated cost of everything currently on the queue."""
+        return sum(r.estimated_cost_s for r in self._queue)
+
+    def _reject(self, request: InferenceRequest, reason: str,
+                est: float) -> None:
+        decision = RejectedRequest(
+            graph=request.graph, reason=reason, estimated_cost_s=est,
+            deadline_s=request.deadline_s, request_id=request.request_id)
+        self._rejected.append(decision)
+        raise AdmissionError(decision)
+
     # ---- request queue ---------------------------------------------------
 
     def submit(self, request: InferenceRequest) -> int:
@@ -231,7 +417,21 @@ class ServingEngine:
         if request.features.shape[0] != n:
             raise ValueError(
                 f"features rows {request.features.shape[0]} != graph nodes {n}")
-        request = dataclasses.replace(request, request_id=self._next_id)
+        cap = self.config.max_queue_cost_s
+        est = 0.0
+        if request.deadline_s is not None or cap is not None:
+            # Price the request only when an admission policy can act on
+            # it: the estimate's first call per (graph, width) runs RoBW +
+            # densification, which must not tax submit() latency for
+            # deployments that never set a deadline or a queue cap.
+            est = self.estimate_request_cost(request)
+        if request.deadline_s is not None and est > request.deadline_s:
+            self._reject(request, "deadline-infeasible", est)
+        if cap is not None and self.queued_cost_s() + est > cap:
+            self._reject(request, "queue-full", est)
+        request = dataclasses.replace(
+            request, request_id=self._next_id, estimated_cost_s=est,
+            submitted_s=time.monotonic())
         self._next_id += 1
         self._queue.append(request)
         return request.request_id
@@ -261,6 +461,20 @@ class ServingEngine:
             self._queue = queue + self._queue  # nothing consumed
             raise KeyError(
                 f"queued requests reference unregistered graphs {unknown}")
+        # Deadline expiry: a request whose relative deadline passed while it
+        # waited is dropped here, not run — it could only waste the batch's
+        # budget producing an answer nobody can use.
+        now = time.monotonic()
+        expired = [
+            RejectedRequest(graph=r.graph, reason="deadline-expired",
+                            estimated_cost_s=r.estimated_cost_s,
+                            deadline_s=r.deadline_s, request_id=r.request_id)
+            for r in queue
+            if r.deadline_s is not None
+            and now - r.submitted_s > r.deadline_s
+        ]
+        expired_ids = {d.request_id for d in expired}
+        queue = [r for r in queue if r.request_id not in expired_ids]
         promoted = ici = dir_hits = 0
         # Duplicate-avoided demotions happen inside put()/evictions, outside
         # any stream's stats window — diff the cache's cumulative counter.
@@ -284,13 +498,15 @@ class ServingEngine:
         results.sort(key=lambda r: r.request_id)
         dup = ((self.cache.stats.duplicate_avoided_bytes - dup0)
                if self.cache is not None else 0)
+        rejected, self._rejected = self._rejected, []
         return BatchReport(
             results=results, uploaded_bytes=uploaded, cache_hit_bytes=hits,
             promoted_bytes=promoted, segments_streamed=segments,
             aggregation_passes=passes,
             wall_seconds=time.perf_counter() - t0,
             ici_bytes=ici, directory_hit_bytes=dir_hits,
-            duplicate_avoided_bytes=dup)
+            duplicate_avoided_bytes=dup,
+            rejected=rejected, expired=expired)
 
     def _run_graph_group(self, name: str,
                          group: List[InferenceRequest]) -> List[InferenceResult]:

@@ -7,6 +7,7 @@ device-tier, MXU-aligned format produced by RoBW preprocessing.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Tuple
 
 import numpy as np
@@ -124,6 +125,32 @@ class BlockELL:
 
     def nbytes(self) -> int:
         return int(self.blocks.nbytes + self.col_tile.nbytes + self.n_tiles.nbytes)
+
+
+def csr_fingerprint(a: CSR) -> str:
+    """Content fingerprint of a CSR: shape, nnz, and a CRC over the row
+    pointers, column ids, AND values.
+
+    Cache namespaces used to key on ``id(a)``, which CPython recycles after
+    GC — two different graphs could alias one namespace across runs. The
+    fingerprint is content-addressed, so it is also stable across processes
+    (checkpointed bricks from one serving process hit in the next) and
+    deterministic for sharded-cache placement (`shard_of` CRCs the key).
+    Values are part of the hash because cached BlockELL bricks embed them:
+    a re-weighted graph with identical sparsity must never hit the old
+    graph's bricks. Memoized on the instance; CSRs are contractually
+    immutable once cached (mutating one after the first call would serve a
+    stale fingerprint).
+    """
+    memo = getattr(a, "_fingerprint", None)
+    if memo is not None:
+        return memo
+    crc = zlib.crc32(np.ascontiguousarray(a.indptr).tobytes())
+    crc = zlib.crc32(np.ascontiguousarray(a.indices).tobytes(), crc)
+    crc = zlib.crc32(np.ascontiguousarray(a.data).tobytes(), crc)
+    fp = f"{a.shape[0]}x{a.shape[1]}n{a.nnz}c{crc:08x}"
+    a._fingerprint = fp
+    return fp
 
 
 def csr_from_dense(dense: np.ndarray) -> CSR:

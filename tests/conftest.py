@@ -7,8 +7,18 @@ Tier split (see README "Testing"):
 The `slow` marker is registered here (and in pyproject.toml) so the fast
 subset never warns on unknown markers.
 """
+import os
+import sys
+
 import numpy as np
 import pytest
+
+# The golden-equality tests reuse the benchmark configs (benchmarks.common
+# builds the fig6 datasets/budgets); the benchmarks package lives at the
+# repo root, which is not on sys.path when only PYTHONPATH=src is set.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
 
 
 def pytest_configure(config):

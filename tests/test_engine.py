@@ -11,6 +11,10 @@ The headline assertions mirror ISSUE 2's acceptance criteria:
     with AiresSpGEMM execute-mode `uploaded_bytes` once both plan with the
     same per-segment budget — the model is locked to reality.
 """
+import json
+import os
+import time
+
 import numpy as np
 import pytest
 import jax.numpy as jnp
@@ -20,7 +24,9 @@ from repro.core import (
 )
 from repro.io import CacheDirectory, ShardedSegmentCache, TieredSegmentCache
 from repro.io.tiers import PAPER_GPU_SYSTEM
-from repro.runtime import EngineConfig, InferenceRequest, ServingEngine
+from repro.runtime import (
+    AdmissionError, EngineConfig, InferenceRequest, ServingEngine,
+)
 from repro.sparse.ref_spgemm import spgemm_csr_dense
 
 
@@ -443,6 +449,233 @@ def test_serving_engine_over_real_mesh(quickstart_graph):
     stats = eng.cache_stats()
     assert stats.remote_hits > 0, \
         "second pass must hit bricks owned by remote chips"
+
+
+# ---- execute interpreter bit-exact with the PR-3 BatchReports --------------
+
+def _report_fields(rep):
+    return {
+        "uploaded_bytes": rep.uploaded_bytes,
+        "cache_hit_bytes": rep.cache_hit_bytes,
+        "promoted_bytes": rep.promoted_bytes,
+        "segments_streamed": rep.segments_streamed,
+        "aggregation_passes": rep.aggregation_passes,
+        "ici_bytes": rep.ici_bytes,
+        "directory_hit_bytes": rep.directory_hit_bytes,
+        "duplicate_avoided_bytes": rep.duplicate_avoided_bytes,
+    }
+
+
+def test_batch_reports_bitexact_with_prerefactor_golden(quickstart_graph):
+    """ISSUE 4 acceptance: the execute-interpreter serving path reproduces
+    the pre-refactor (PR 3) BatchReport byte accounting exactly — cache on,
+    cache off, and 4-shard × 2 workers, two epochs each (frozen in
+    tests/data/golden_pipeline.json)."""
+    with open(os.path.join(os.path.dirname(__file__), "data",
+                           "golden_pipeline.json")) as f:
+        golden = json.load(f)["engine"]
+    a = quickstart_graph
+    rng = np.random.default_rng(1)
+    h = rng.standard_normal((a.n_rows, 32)).astype(np.float32)
+    w = [rng.standard_normal((32, 16)).astype(np.float32)]
+    budget = _budget(a)
+
+    for label, kw, nworkers in [("cache_on", {}, 1),
+                                ("cache_off", {"cache_enabled": False}, 1),
+                                ("shard4", {"cache_shards": 4}, 2)]:
+        directory = CacheDirectory() if nworkers > 1 else None
+        workers = [
+            ServingEngine(EngineConfig(device_budget_bytes=budget,
+                                       max_batch_features=64,
+                                       worker_id=wid, **kw),
+                          directory=directory)
+            for wid in range(nworkers)
+        ]
+        for eng in workers:
+            eng.register_graph("lj", a)
+        reports = []
+        for _epoch in range(2):
+            for eng in workers:
+                eng.submit(InferenceRequest("lj", h, w))
+                reports.append(eng.run_batch())
+        for i, (got, want) in enumerate(zip(reports, golden[label])):
+            assert _report_fields(got) == want, (label, i)
+
+
+# ---- admission control (ISSUE 4 satellite) ---------------------------------
+
+def test_submit_estimates_request_cost(quickstart_graph):
+    a = quickstart_graph
+    eng = _engine(a, max_queue_cost_s=1e9)
+    eng.register_graph("g", a)
+    h = np.zeros((a.n_rows, 16), np.float32)
+    one = eng.estimate_request_cost(InferenceRequest("g", h))
+    two = eng.estimate_request_cost(InferenceRequest(
+        "g", h, weights=[np.zeros((16, 16), np.float32)] * 2))
+    assert one > 0
+    # a 2-layer request costs two streamed passes
+    assert two == pytest.approx(2 * one)
+    rid = eng.submit(InferenceRequest("g", h))
+    assert eng._queue[0].request_id == rid
+    assert eng._queue[0].estimated_cost_s == pytest.approx(one)
+    assert eng.queued_cost_s() == pytest.approx(one)
+
+
+def test_submit_skips_pricing_without_admission_policy(quickstart_graph):
+    """No deadline and no queue cap → submit() must not pay for plan
+    preparation (the pre-admission submit latency)."""
+    a = quickstart_graph
+    eng = _engine(a)
+    eng.register_graph("g", a)
+    eng.submit(InferenceRequest("g", np.zeros((a.n_rows, 16), np.float32)))
+    assert eng._queue[0].estimated_cost_s == 0.0
+    assert eng._pass_costs == {}, "no estimate should have been memoized"
+
+
+def test_infeasible_deadline_rejected_at_submit(quickstart_graph):
+    a = quickstart_graph
+    eng = _engine(a)
+    eng.register_graph("g", a)
+    h = np.zeros((a.n_rows, 16), np.float32)
+    with pytest.raises(AdmissionError) as exc:
+        eng.submit(InferenceRequest("g", h, deadline_s=1e-15))
+    assert exc.value.decision.reason == "deadline-infeasible"
+    assert eng.run_batch().rejected[0].reason == "deadline-infeasible"
+    # a realistic deadline is admitted and served
+    rid = eng.submit(InferenceRequest("g", h, deadline_s=60.0))
+    rep = eng.run_batch()
+    assert [r.request_id for r in rep.results] == [rid]
+    assert rep.rejected == [] and rep.expired == []
+
+
+def test_queue_cost_cap_rejects_overflow(quickstart_graph):
+    a = quickstart_graph
+    probe = _engine(a)
+    probe.register_graph("g", a)
+    h = np.zeros((a.n_rows, 16), np.float32)
+    unit = probe.estimate_request_cost(InferenceRequest("g", h))
+
+    eng = _engine(a, max_queue_cost_s=1.5 * unit)
+    eng.register_graph("g", a)
+    eng.submit(InferenceRequest("g", h))
+    with pytest.raises(AdmissionError) as exc:
+        eng.submit(InferenceRequest("g", h))
+    assert exc.value.decision.reason == "queue-full"
+    rep = eng.run_batch()
+    assert len(rep.results) == 1
+    assert [d.reason for d in rep.rejected] == ["queue-full"]
+    # the drain freed the queue budget: the next submit is admitted
+    eng.submit(InferenceRequest("g", h))
+    assert len(eng.run_batch().results) == 1
+
+
+def test_expired_requests_dropped_not_run(quickstart_graph):
+    a = quickstart_graph
+    eng = _engine(a)
+    eng.register_graph("g", a)
+    h = np.zeros((a.n_rows, 16), np.float32)
+    rid_expired = eng.submit(InferenceRequest("g", h, deadline_s=0.03))
+    rid_live = eng.submit(InferenceRequest("g", h))
+    time.sleep(0.08)
+    rep = eng.run_batch()
+    assert [r.request_id for r in rep.results] == [rid_live]
+    assert [d.request_id for d in rep.expired] == [rid_expired]
+    assert rep.expired[0].reason == "deadline-expired"
+
+
+# ---- warm start from checkpointed bricks (ISSUE 4 satellite) ---------------
+
+def test_warm_start_restores_cache_and_charges_tms(quickstart_graph,
+                                                   tmp_path):
+    a = quickstart_graph
+    rng = np.random.default_rng(21)
+    h = rng.standard_normal((a.n_rows, 32)).astype(np.float32)
+    w = [rng.standard_normal((32, 16)).astype(np.float32)]
+
+    donor = _engine(a)
+    donor.register_graph("lj", a)
+    donor.submit(InferenceRequest("lj", h, w))
+    cold = donor.run_batch()
+    assert cold.uploaded_bytes > 0
+    donor.checkpoint_cache(str(tmp_path))
+
+    # A *fresh* engine (fresh cache, fresh process in production — keys are
+    # content-addressed so they survive): warm-start, then first batch.
+    fresh = _engine(a)
+    fresh.register_graph("lj", a)
+    ws = fresh.warm_start(str(tmp_path))
+    assert ws.bricks > 0
+    assert ws.wire_bytes == cold.uploaded_bytes
+    assert ws.modeled_seconds > 0
+    # honesty: the warm-start load shows up on the engine's tms paths
+    by_path = {p.value: b for p, b in fresh.tms.bytes_by_path().items()}
+    assert by_path.get("sio", 0) >= ws.wire_bytes   # storage → host
+    assert by_path.get("dma", 0) >= ws.wire_bytes   # host → device
+
+    fresh.submit(InferenceRequest("lj", h, w))
+    first = fresh.run_batch()
+    assert first.uploaded_bytes == 0, \
+        "warm-started first epoch must not re-stream wire bytes"
+    assert first.cache_hit_bytes == cold.uploaded_bytes
+    np.testing.assert_array_equal(first.results[0].output,
+                                  cold.results[0].output)
+
+
+def test_warm_start_requires_cache(quickstart_graph, tmp_path):
+    eng = _engine(quickstart_graph, cache_enabled=False)
+    with pytest.raises(ValueError, match="cache_enabled"):
+        eng.warm_start(str(tmp_path))
+    with pytest.raises(ValueError, match="cache_enabled"):
+        eng.checkpoint_cache(str(tmp_path))
+
+
+def test_warm_start_empty_directory_is_noop(quickstart_graph, tmp_path):
+    eng = _engine(quickstart_graph)
+    eng.register_graph("g", quickstart_graph)
+    ws = eng.warm_start(str(tmp_path))
+    assert (ws.bricks, ws.wire_bytes) == (0, 0)
+
+
+def test_checkpoint_cache_coexists_with_training_checkpoints(
+        quickstart_graph, tmp_path):
+    """Brick checkpoints live in their own subdirectory: pointing
+    checkpoint_cache at a directory holding training checkpoints must
+    neither prune them nor let warm_start misread them."""
+    import os
+
+    from repro.checkpoint import Checkpointer
+
+    a = quickstart_graph
+    ckpt = Checkpointer(str(tmp_path))
+    ckpt.save(100, params={"layer0": {"w": np.ones((2, 2))}},
+              opt_state={"m": np.zeros(2)})
+
+    eng = _engine(a)
+    eng.register_graph("g", a)
+    eng.infer("g", np.zeros((a.n_rows, 16), np.float32))
+    eng.checkpoint_cache(str(tmp_path))  # default step=0 < training step
+
+    # the training checkpoint survived the brick save's keep_last=1 prune
+    assert os.path.isdir(tmp_path / "step_100")
+    restored, step = ckpt.restore({"params": {"layer0": {"w": None}},
+                                  "opt_state": {"m": None}})
+    assert step == 100
+    np.testing.assert_array_equal(restored["params"]["layer0"]["w"],
+                                  np.ones((2, 2)))
+
+    fresh = _engine(a)
+    fresh.register_graph("g", a)
+    assert fresh.warm_start(str(tmp_path)).bricks > 0
+
+
+def test_load_segment_bricks_ignores_foreign_checkpoints(tmp_path):
+    """A directory that only holds a training checkpoint yields no bricks
+    (not a crash on its nested param keys)."""
+    from repro.checkpoint import Checkpointer, load_segment_bricks
+
+    Checkpointer(str(tmp_path)).save(
+        3, params={"layer0": {"w": np.ones((2, 2))}}, opt_state={})
+    assert load_segment_bricks(str(tmp_path)) == []
 
 
 # ---- gcn_epoch passthrough -----------------------------------------------

@@ -92,3 +92,33 @@ def test_expert_streaming_complete_blocks():
         got[rng_blk] = arrays
     rebuilt = np.concatenate([np.asarray(got[k]["w_gate"]) for k in sorted(got)])
     np.testing.assert_array_equal(rebuilt, bank.arrays["w_gate"])
+
+
+def test_tms_aggregates_match_records_and_bound_memory():
+    """bytes/seconds_by_path come from running aggregates identical to a
+    record-list fold; keep_records=False (a ServingEngine's lifetime tms)
+    keeps the aggregates but never grows the per-transfer log."""
+    from repro.io.tiers import (
+        MemoryTier, PAPER_GPU_SYSTEM, Path, TieredMemorySystem,
+    )
+
+    full = TieredMemorySystem(PAPER_GPU_SYSTEM)
+    lean = TieredMemorySystem(PAPER_GPU_SYSTEM, keep_records=False)
+    for tms in (full, lean):
+        for i in range(5):
+            tms.transfer(Path.DMA, MemoryTier.HOST, MemoryTier.DEVICE,
+                         1000 + i, tag="t")
+        tms.transfer(Path.GDS, MemoryTier.STORAGE, MemoryTier.DEVICE, 77)
+    assert len(full.transfers) == 6 and len(lean.transfers) == 0
+    assert full.bytes_by_path() == lean.bytes_by_path()
+    assert full.seconds_by_path() == lean.seconds_by_path()
+    assert full.total_bytes() == lean.total_bytes() == sum(
+        t.nbytes for t in full.transfers)
+    # aggregates are the record fold, float-for-float
+    import collections
+    by = collections.defaultdict(float)
+    for t in full.transfers:
+        by[t.path] += t.seconds
+    assert dict(by) == full.seconds_by_path()
+    lean.reset_accounting()
+    assert lean.total_bytes() == 0 and lean.bytes_by_path() == {}

@@ -1,0 +1,142 @@
+"""runtime/supervisor.py coverage: restart/backoff, straggler EWMA, the
+streamer-deadline feedback loop, and elastic mesh shaping."""
+import pytest
+
+from repro.runtime import ElasticMesh, RunState, Supervisor, SupervisorConfig
+
+
+# ---- Supervisor.run: crash recovery ---------------------------------------
+
+def test_run_completes_without_failures():
+    sup = Supervisor(SupervisorConfig(backoff_s=0.0))
+    state = sup.run(lambda start: start + 10)
+    assert state.step == 10
+    assert state.restarts == 0
+
+
+def test_run_restarts_on_recoverable_and_restores():
+    calls = []
+
+    def body(start):
+        calls.append(start)
+        if len(calls) < 3:
+            raise RuntimeError("transient")
+        return start + 1
+
+    restores = []
+
+    def restore():
+        restores.append(True)
+        return 7
+
+    sup = Supervisor(SupervisorConfig(max_restarts=3, backoff_s=0.0))
+    state = sup.run(body, restore=restore)
+    assert state.restarts == 2
+    assert len(restores) == 2
+    # after the first failure every retry starts from the restored step
+    assert calls == [0, 7, 7]
+    assert state.step == 8
+
+
+def test_run_without_restore_retries_from_same_step():
+    attempts = []
+
+    def body(start):
+        attempts.append(start)
+        if len(attempts) == 1:
+            raise RuntimeError("once")
+        return start + 5
+
+    sup = Supervisor(SupervisorConfig(backoff_s=0.0))
+    state = sup.run(body)
+    assert attempts == [0, 0]
+    assert state.step == 5
+
+
+def test_run_exceeding_max_restarts_raises():
+    sup = Supervisor(SupervisorConfig(max_restarts=2, backoff_s=0.0))
+
+    def body(start):
+        raise RuntimeError("always")
+
+    with pytest.raises(RuntimeError, match="max_restarts"):
+        sup.run(body)
+    assert sup.state.restarts == 3  # counted before the give-up check
+
+
+def test_unrecoverable_exception_propagates_immediately():
+    sup = Supervisor(SupervisorConfig(backoff_s=0.0),
+                     recoverable=(ValueError,))
+
+    def body(start):
+        raise KeyError("not recoverable")
+
+    with pytest.raises(KeyError):
+        sup.run(body)
+    assert sup.state.restarts == 0
+
+
+# ---- straggler tracking ----------------------------------------------------
+
+def test_observe_step_first_sample_seeds_ewma():
+    sup = Supervisor(SupervisorConfig())
+    assert sup.observe_step(1.0) is False
+    assert sup.state.step_time_ewma == 1.0
+
+
+def test_observe_step_flags_stragglers_and_clamps_ewma():
+    cfg = SupervisorConfig(straggler_factor=3.0, ewma_alpha=0.5)
+    sup = Supervisor(cfg)
+    sup.observe_step(1.0)
+    assert sup.observe_step(10.0) is True        # > 3 × ewma
+    assert sup.state.straggler_events == 1
+    # the straggler was clamped to factor×ewma before entering the average,
+    # so one hiccup cannot triple the bar for the next step
+    assert sup.state.step_time_ewma == pytest.approx(
+        0.5 * 1.0 + 0.5 * 3.0)
+    assert sup.observe_step(2.1) is False        # normal step again
+
+
+def test_observe_step_normal_steps_track_average():
+    sup = Supervisor(SupervisorConfig(ewma_alpha=0.2))
+    sup.observe_step(1.0)
+    assert sup.observe_step(1.5) is False
+    assert sup.state.step_time_ewma == pytest.approx(0.8 * 1.0 + 0.2 * 1.5)
+
+
+def test_stream_deadline_feeds_back_from_ewma():
+    sup = Supervisor(SupervisorConfig(straggler_factor=2.5))
+    assert sup.stream_deadline() is None         # no samples yet
+    sup.observe_step(0.4)
+    assert sup.stream_deadline() == pytest.approx(1.0)
+
+
+# ---- elastic mesh ----------------------------------------------------------
+
+def test_elastic_mesh_shape_for_divides_model_parallel():
+    em = ElasticMesh(model_parallel=4)
+    assert em.shape_for(8) == (2, 4)
+    # a lost node: gcd degrades model parallelism instead of failing
+    assert em.shape_for(6) == (3, 2)
+    assert em.shape_for(5) == (5, 1)
+
+
+def test_elastic_mesh_local_batch_ramps():
+    em = ElasticMesh(model_parallel=2)
+    assert em.local_batch(32, 8) == 8   # dp=4
+    assert em.local_batch(32, 4) == 16  # dp=2
+    assert em.local_batch(1, 8) == 1    # floor at 1
+
+
+def test_elastic_mesh_make_uses_live_devices():
+    import jax
+
+    em = ElasticMesh(model_parallel=1)
+    mesh = em.make()
+    assert mesh.devices.size == len(jax.devices())
+    assert mesh.axis_names == ("data", "model")
+
+
+def test_run_state_defaults():
+    st = RunState()
+    assert (st.step, st.restarts, st.straggler_events) == (0, 0, 0)
