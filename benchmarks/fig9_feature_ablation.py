@@ -6,6 +6,12 @@ Paper claim: AIRES's speedup is consistent across model configurations.
 epochs of the AIRES scheduler sharing one cache — the second epoch's
 Phase II DMA drops to cache promotions only, and the row reports its
 makespan plus the wire bytes the cache kept off the bus.
+
+`--passes` adds the plan-rewrite ablation arm (repro.core.passes): the
+same warm-epoch runs routed through a PassPipeline — shard-aware RoBW
+placement (with `--shards`: warm ici_bytes must come out strictly lower
+than the pass-free shard arm, the ISSUE 5 acceptance metric) plus
+transfer coalescing.
 """
 from __future__ import annotations
 
@@ -15,7 +21,13 @@ from typing import List
 import numpy as np
 
 from benchmarks.common import SCALE, budget_for, csv_row, dataset, feature_spec
-from repro.core import FeatureSpec, SCHEDULERS, gcn_epoch
+from repro.core import (
+    PassPipeline,
+    SCHEDULERS,
+    ShardPlacementPass,
+    TransferCoalescingPass,
+    gcn_epoch,
+)
 from repro.io import ShardedSegmentCache, TieredSegmentCache
 from repro.io.tiers import PAPER_GPU_SYSTEM
 
@@ -23,7 +35,13 @@ DATASET = "kV2a"
 FEATURE_SIZES = [16, 32, 64, 128, 256]
 
 
-def run(cache: bool = False, shards: int = 0) -> List[str]:
+def _pass_pipeline() -> PassPipeline:
+    return PassPipeline([ShardPlacementPass(), TransferCoalescingPass()],
+                        spec=PAPER_GPU_SYSTEM)
+
+
+def run(cache: bool = False, shards: int = 0,
+        passes: bool = False) -> List[str]:
     rows = [f"# fig9 feature-size ablation on {DATASET} (scale={SCALE})"]
     a = dataset(DATASET)
     for f in FEATURE_SIZES:
@@ -46,6 +64,12 @@ def run(cache: bool = False, shards: int = 0) -> List[str]:
             rows.append(_warm_epoch_row(
                 a, feat, budget, TieredSegmentCache(device_budget_bytes=budget),
                 f"fig9/F{f}/aires+cache"))
+            if passes:
+                rows.append(_warm_epoch_row(
+                    a, feat, budget,
+                    TieredSegmentCache(device_budget_bytes=budget),
+                    f"fig9/F{f}/aires+cache+passes",
+                    passes=_pass_pipeline()))
         if shards:
             # Mesh-sharded device tier: each shard retains 1/shards of the
             # plan; warm-epoch remote hits ride ICI (cheap) instead of the
@@ -55,13 +79,24 @@ def run(cache: bool = False, shards: int = 0) -> List[str]:
                 ShardedSegmentCache(device_budget_bytes=budget,
                                     n_shards=shards),
                 f"fig9/F{f}/aires+cache{shards}shard", ici=True))
+            if passes:
+                # Placement pass: the plan's bricks are pinned to the shard
+                # that streams them — warm ici_bytes strictly below the
+                # pass-free row above (the acceptance comparison).
+                rows.append(_warm_epoch_row(
+                    a, feat, budget,
+                    ShardedSegmentCache(device_budget_bytes=budget,
+                                        n_shards=shards),
+                    f"fig9/F{f}/aires+cache{shards}shard+passes", ici=True,
+                    passes=_pass_pipeline()))
     return rows
 
 
-def _warm_epoch_row(a, feat, budget, seg_cache, label, ici=False) -> str:
+def _warm_epoch_row(a, feat, budget, seg_cache, label, ici=False,
+                    passes=None) -> str:
     """Two consecutive AIRES epochs sharing `seg_cache`; report the warm one."""
     sched = SCHEDULERS["aires"](PAPER_GPU_SYSTEM, device_budget=budget,
-                                segment_cache=seg_cache)
+                                segment_cache=seg_cache, passes=passes)
     warm = cold = None
     for _ in range(2):  # epoch 1 fills, epoch 2 hits
         cold, warm = warm, sched.run(a, feat, dataset=DATASET).metrics
@@ -79,8 +114,12 @@ def main(argv=None) -> None:
                     help="add the tiered-segment-cache warm-epoch arm")
     ap.add_argument("--shards", type=int, default=0,
                     help="add a mesh-sharded cache arm with this many shards")
+    ap.add_argument("--passes", action="store_true",
+                    help="add plan-rewrite-pass arms (shard placement + "
+                         "transfer coalescing) next to the cache/shard arms")
     args = ap.parse_args(argv)
-    print("\n".join(run(cache=args.cache, shards=args.shards)))
+    print("\n".join(run(cache=args.cache, shards=args.shards,
+                        passes=args.passes)))
 
 
 if __name__ == "__main__":

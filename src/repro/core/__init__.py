@@ -30,8 +30,21 @@ from repro.core.pipeline import (
     PhaseSpec,
     PipelinePlan,
     PlanOp,
+    PlanValidationError,
     TransferOp,
     modeled_spgemm_seconds,
+)
+from repro.core.passes import (
+    CoalescedPayload,
+    EDFOrderingPass,
+    PassContext,
+    PassPipeline,
+    PassReport,
+    PlanPass,
+    ShardPlacementPass,
+    TransferCoalescingPass,
+    deadline_order,
+    edf_sort,
 )
 from repro.core.robw import (
     RoBWPlan,
@@ -65,6 +78,9 @@ __all__ = [
     "ScheduleMetrics", "ScheduleResult", "UCGScheduler",
     "AllocOp", "CacheProbeOp", "ComputeOp", "CostInterpreter",
     "ExecuteInterpreter", "HostPreprocessOp", "PhaseSpec", "PipelinePlan",
-    "PlanOp", "TransferOp", "modeled_spgemm_seconds",
+    "PlanOp", "PlanValidationError", "TransferOp", "modeled_spgemm_seconds",
+    "CoalescedPayload", "EDFOrderingPass", "PassContext", "PassPipeline",
+    "PassReport", "PlanPass", "ShardPlacementPass", "TransferCoalescingPass",
+    "deadline_order", "edf_sort",
     "AiresConfig", "AiresSpGEMM", "EpochMetrics", "gcn_epoch",
 ]

@@ -173,7 +173,13 @@ class CacheProbeOp:
     """Probe the segment cache for `key`; on miss, perform the fallback
     `miss` transfer and retain `value` under the key. A device-tier hit is
     free wire traffic; a host-tier hit costs the promotion DMA (charged by
-    the cache itself). `payload` as on TransferOp."""
+    the cache itself). `payload` as on TransferOp.
+
+    `place_shard` is a placement override written by the shard-placement
+    rewrite pass (`repro.core.passes.ShardPlacementPass`): the miss's
+    retain lands on that cache shard instead of the key's CRC owner, so a
+    graph's hot bricks live where they are consumed. None = default owner.
+    """
 
     key: Any                 # io.segment_cache.SegmentKey
     wire_bytes: int
@@ -181,6 +187,7 @@ class CacheProbeOp:
     value: Any = True
     pin: Any = None
     payload: Any = None
+    place_shard: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -194,6 +201,14 @@ class HostPreprocessOp:
 
 
 OpKind = Union[AllocOp, TransferOp, ComputeOp, CacheProbeOp, HostPreprocessOp]
+
+
+class PlanValidationError(ValueError):
+    """A structurally malformed `PipelinePlan`: dangling, self-, forward or
+    cyclic dependencies, or ops in undeclared phases. Raised by
+    `PipelinePlan.validate()` — and by the interpreters before running —
+    instead of letting a bad dep silently read a completion time of 0.0
+    and mis-order the lane-availability makespan."""
 
 
 @dataclasses.dataclass
@@ -243,6 +258,50 @@ class PipelinePlan:
         """Append an op; returns its index (for later `deps`)."""
         self.ops.append(PlanOp(op, phase, lane, tuple(deps)))
         return len(self.ops) - 1
+
+    def validate(self) -> "PipelinePlan":
+        """Structural validation; returns self, raises PlanValidationError.
+
+        The interpreters evaluate ops in list order, reading each dep's
+        completion time from earlier iterations — so list order must be a
+        topological order of the dep graph. A dangling index, a self-dep,
+        or a forward reference (which every dependency cycle necessarily
+        contains) would read a completion time of 0.0 and silently
+        mis-order the lane-availability makespan. `PassPipeline`
+        revalidates after every rewrite pass; builder plans are checked on
+        interpretation.
+        """
+        names = [ph.name for ph in self.phases]
+        if len(set(names)) != len(names):
+            raise PlanValidationError(
+                f"duplicate phase declarations: {names}")
+        declared = set(names)
+        n = len(self.ops)
+        for idx, bound in enumerate(self.ops):
+            if declared and bound.phase not in declared:
+                raise PlanValidationError(
+                    f"op {idx} ({type(bound.op).__name__}) sits in "
+                    f"undeclared phase {bound.phase!r} "
+                    f"(declared: {sorted(declared)})")
+            for d in bound.deps:
+                d = int(d)
+                if not 0 <= d < n:
+                    raise PlanValidationError(
+                        f"op {idx} ({type(bound.op).__name__}) has a "
+                        f"dangling dependency on op {d} "
+                        f"(plan has {n} ops)")
+                if d == idx:
+                    raise PlanValidationError(
+                        f"op {idx} ({type(bound.op).__name__}) depends on "
+                        "itself (dependency cycle)")
+                if d > idx:
+                    raise PlanValidationError(
+                        f"op {idx} ({type(bound.op).__name__}) depends on "
+                        f"later op {d}: list order must be a topological "
+                        "order (forward references — including every "
+                        "dependency cycle — would silently mis-order the "
+                        "makespan)")
+        return self
 
     def phase_ops(self, phase: str) -> List[OpKind]:
         return [p.op for p in self.ops if p.phase == phase]
@@ -324,6 +383,7 @@ class CostInterpreter:
         if plan.oom:
             m.oom = True
             return m, None
+        plan.validate()
         out = (np.zeros(plan.out_shape, dtype=plan.out_dtype)
                if self.execute and plan.out_shape is not None else None)
 
@@ -431,7 +491,8 @@ class CostInterpreter:
             return promote_s
         t = op.miss
         secs = tms.transfer(t.path, t.src, t.dst, t.nbytes, tag=t.tag)
-        cache.put(op.key, op.value, op.wire_bytes, tms=tms, pin=op.pin)
+        cache.put(op.key, op.value, op.wire_bytes, tms=tms, pin=op.pin,
+                  shard=op.place_shard)
         return secs
 
     @staticmethod
@@ -442,7 +503,8 @@ class CostInterpreter:
         peer-promote — the pricing lives next to `get_with_cost`, so the
         two readings cannot drift); a would-be miss adds the fallback
         wire transfer. Nothing is mutated."""
-        hit, cost = cache.peek_cost(op.key, nbytes=op.wire_bytes, tms=tms)
+        hit, cost = cache.peek_cost(op.key, nbytes=op.wire_bytes, tms=tms,
+                                    shard=op.place_shard)
         if hit:
             m.cache_hit_bytes += op.wire_bytes
             return cost
@@ -489,28 +551,28 @@ class ExecuteInterpreter(CostInterpreter):
         from repro.io.streamer import DoubleBufferedStreamer
 
         payloads: List[Any] = []
-        meta: Dict[Any, Tuple[Any, int]] = {}
+        meta: Dict[Any, Tuple[Any, int, Optional[int]]] = {}
         probed = False
         for bound in plan.ops:
             op = bound.op
             if isinstance(op, CacheProbeOp) and op.payload is not None:
                 payloads.append(op.payload)
-                meta[op.payload[0]] = (op.key, op.wire_bytes)
+                meta[op.payload[0]] = (op.key, op.wire_bytes, op.place_shard)
                 probed = True
             elif isinstance(op, TransferOp) and op.payload is not None:
                 payloads.append(op.payload)
-                meta[op.payload[0]] = (None, op.nbytes)
+                meta[op.payload[0]] = (None, op.nbytes, None)
 
         cache = self.segment_cache
         cache_lookup = cache_store = None
         if cache is not None and probed:
             def cache_lookup(payload):
-                key, nbytes = meta[payload[0]]
+                key, nbytes, _ = meta[payload[0]]
                 return cache.get(key, nbytes=nbytes)
 
             def cache_store(payload, dev):
-                key, nbytes = meta[payload[0]]
-                cache.put(key, dev, nbytes)
+                key, nbytes, place = meta[payload[0]]
+                cache.put(key, dev, nbytes, shard=place)
 
         streamer = DoubleBufferedStreamer(
             upload, consume, depth=depth, deadline_s=deadline_s,

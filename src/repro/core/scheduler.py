@@ -88,6 +88,9 @@ class ScheduleResult:
     plan: Optional[RoBWPlan] = None
     mem: Optional[MemoryEstimate] = None
     pipeline: Optional[PipelinePlan] = None   # the IR both interpreters read
+    # Per-pass before/after cost deltas when a PassPipeline rewrote the
+    # plan (repro.core.passes.PassReport); empty without passes.
+    pass_reports: list = dataclasses.field(default_factory=list)
 
 
 def _spgemm_flops(a: CSR, f: int) -> float:
@@ -116,11 +119,17 @@ class _BaseScheduler:
         device_budget: Optional[int] = None,
         peak_flops: float = 82.6e12,       # RTX4090-class fp32 for paper benches
         compute_efficiency: float = 0.20,  # fraction of HBM bw sparse kernels achieve
+        passes=None,                       # Optional[repro.core.passes.PassPipeline]
     ):
         self.spec = spec
         self.device_budget = device_budget or spec.device_capacity
         self.peak_flops = peak_flops
         self.compute_efficiency = compute_efficiency
+        # Plan-rewrite passes applied between build_plan() and the
+        # interpreter (run() = build → rewrite → interpret). None — and
+        # the empty PassPipeline — are the identity: bit-exact with the
+        # pass-free pipeline.
+        self.passes = passes
 
     def _kernel_seconds(self, flops: float) -> float:
         return flops / (self.peak_flops * self.compute_efficiency)
@@ -158,8 +167,17 @@ class _BaseScheduler:
     def run(self, a: CSR, h,
             mode: Literal["simulate", "execute"] = "simulate",
             dataset: str = "") -> ScheduleResult:
-        """Build the plan, interpret it. One plan — two interpreters."""
+        """Build the plan, rewrite it, interpret it.
+
+        One plan — rewritten once by the optional `passes` PassPipeline
+        (validated after every pass, per-pass cost deltas in
+        `ScheduleResult.pass_reports`) — then handed to either interpreter.
+        """
         plan = self.build_plan(a, h, mode=mode, dataset=dataset)
+        pass_reports = []
+        if self.passes is not None:
+            plan, pass_reports = self.passes.apply(
+                plan, spec=self.spec, segment_cache=self.segment_cache)
         cls = ExecuteInterpreter if mode == "execute" else CostInterpreter
         interp = cls(self.spec, segment_cache=self.segment_cache)
         metrics, x = interp.run(plan)
@@ -167,7 +185,8 @@ class _BaseScheduler:
         # densified bricks / kernel closures it was executed with.
         plan.release_payloads()
         return ScheduleResult(x=x, metrics=metrics, plan=plan.robw,
-                              mem=plan.mem, pipeline=plan)
+                              mem=plan.mem, pipeline=plan,
+                              pass_reports=pass_reports)
 
 
 class AiresScheduler(_BaseScheduler):

@@ -110,12 +110,17 @@ class AiresSpGEMM:
     PREPARED_CACHE_MAX = 8
 
     def __init__(self, config: AiresConfig,
-                 segment_cache: Optional[SegmentCacheLike] = None):
+                 segment_cache: Optional[SegmentCacheLike] = None,
+                 plan_passes=None):
         self.config = config
         # Optional tiered LRU over uploaded BlockELL payloads (shared across
         # engines by the serving layer): repeat streams of the same plan skip
         # the device_put entirely — see StreamStats.cache_hit_bytes.
         self.segment_cache = segment_cache
+        # Optional repro.core.passes.PassPipeline applied to every stream
+        # plan before it is estimated or executed (build → rewrite →
+        # interpret, same seam as the schedulers). None = identity.
+        self.plan_passes = plan_passes
         self._prepared: Dict[tuple, _Prepared] = {}
         self._transposes: Dict[tuple, CSR] = {}
         self.forward_stats_log: List[StreamStats] = []
@@ -288,11 +293,18 @@ class AiresSpGEMM:
 
     def stream_plan(self, a: CSR, h_shape, spec: Optional[TierSpec] = None,
                     transpose: bool = False) -> PipelinePlan:
-        """Plan (and prepare) one streamed pass of `a` at `h_shape`."""
+        """Plan (and prepare) one streamed pass of `a` at `h_shape`.
+
+        The configured `plan_passes` are applied, so estimates price the
+        plan the stream will actually run."""
         h_shape = tuple(int(s) for s in h_shape)
         feat = FeatureSpec(h_shape[0], h_shape[1], 4, 0.0)
         prepared = self._prepare(a, h_shape, transpose)
-        return self._build_stream_plan(prepared, feat=feat, spec=spec)
+        plan = self._build_stream_plan(prepared, feat=feat, spec=spec)
+        if self.plan_passes is not None:
+            plan, _ = self.plan_passes.apply(
+                plan, segment_cache=self.segment_cache)
+        return plan
 
     def _stream(self, prepared: _Prepared, consume_one: Callable,
                 feat: Optional[FeatureSpec] = None) -> tuple:
@@ -302,18 +314,34 @@ class AiresSpGEMM:
         consume_one(ell_dev, i) -> per-segment device result. Returns
         (row-concatenated output, StreamStats).
         """
+        from repro.core.passes import CoalescedPayload
+
         cfg = self.config
         plan = self._build_stream_plan(prepared, feat=feat)
+        if self.plan_passes is not None:
+            plan, _ = self.plan_passes.apply(
+                plan, segment_cache=self.segment_cache)
 
         def upload(payload):
             _, ell = payload
+            if isinstance(ell, CoalescedPayload):
+                # One streamer issue uploads every member brick of a
+                # coalesced transfer (the pass merged adjacent small DMAs).
+                return CoalescedPayload(
+                    [(i, self.device_payload(e)) for i, e in ell.payloads])
             return self.device_payload(ell)
 
-        def consume(dev_payload, i):
+        def consume_device(dev_payload, i):
             blocks, col_tile, n_tiles, ell = dev_payload
             ell_dev = dataclasses.replace(
                 ell, blocks=blocks, col_tile=col_tile, n_tiles=n_tiles)
             return consume_one(ell_dev, i)
+
+        def consume(dev_payload, i):
+            if isinstance(dev_payload, CoalescedPayload):
+                return [consume_device(dp, j)
+                        for j, dp in dev_payload.payloads]
+            return consume_device(dev_payload, i)
 
         cache = self.segment_cache
         # Copy, not alias: TieredSegmentCache.stats mutates in place.
@@ -335,8 +363,15 @@ class AiresSpGEMM:
             stats.ici_bytes = after.ici_bytes - before.ici_bytes
             stats.directory_hit_bytes = (
                 after.directory_hit_bytes - before.directory_hit_bytes)
+        # Flatten coalesced-group results back into per-segment plan order.
+        flat = []
+        for p in parts:
+            if isinstance(p, list):
+                flat.extend(p)
+            else:
+                flat.append(p)
         out = jnp.concatenate(
-            [p[: s.n_rows] for p, s in zip(parts, prepared.segs)], axis=0)
+            [p[: s.n_rows] for p, s in zip(flat, prepared.segs)], axis=0)
         return out, stats
 
     def _stream_spmm(self, prepared: _Prepared, dense) -> tuple:

@@ -1,4 +1,7 @@
 from repro.io.tiers import (
+    ICI_ALL_TO_ALL,
+    ICI_RING,
+    ICITopology,
     MemoryTier,
     TierSpec,
     TieredMemorySystem,
@@ -16,6 +19,7 @@ from repro.io.segment_cache import (
 from repro.io.shard_cache import ShardedSegmentCache, shard_of
 
 __all__ = [
+    "ICI_ALL_TO_ALL", "ICI_RING", "ICITopology",
     "MemoryTier", "TierSpec", "TieredMemorySystem", "TransferRecord",
     "PAPER_GPU_SYSTEM", "TPU_V5E_SYSTEM", "DoubleBufferedStreamer",
     "StreamStats", "CacheDirectory", "CacheStats", "SegmentKey",

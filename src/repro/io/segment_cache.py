@@ -380,15 +380,18 @@ class TieredSegmentCache:
             return None, 0.0
 
     def peek_cost(self, key: SegmentKey, nbytes: int = 0,
-                  tms: Optional[TieredMemorySystem] = None
-                  ) -> Tuple[bool, float]:
+                  tms: Optional[TieredMemorySystem] = None,
+                  shard: Optional[int] = None) -> Tuple[bool, float]:
         """Price a `get_with_cost` WITHOUT performing it: no promotion, no
         LRU reorder, no stats. Returns (would_hit, modeled_seconds); the
         promotion a host-tier or directory-peer hit would pay is charged to
         `tms` (pass the estimate's own fresh tms — the default `self.tms`
         is this cache's live accounting). This is the cache's half of
         `PipelinePlan.estimate()`: the pricing stays next to the code that
-        really charges it (`get_with_cost`), so the two cannot drift."""
+        really charges it (`get_with_cost`), so the two cannot drift.
+        `shard` (a placement override the miss's put would carry) is
+        protocol parity with `ShardedSegmentCache` — a single-chip cache
+        has one shard, so it is ignored here."""
         tier = self.tier_of(key)
         if tier is MemoryTier.DEVICE:
             return True, 0.0
@@ -406,8 +409,10 @@ class TieredSegmentCache:
 
     def put(self, key: SegmentKey, value: Any, nbytes: int,
             tms: Optional[TieredMemorySystem] = None,
-            pin: Any = None) -> None:
-        """Insert/refresh a device-form value of `nbytes` wire bytes."""
+            pin: Any = None, shard: Optional[int] = None) -> None:
+        """Insert/refresh a device-form value of `nbytes` wire bytes.
+        `shard` (a placement override) is protocol parity with
+        `ShardedSegmentCache`; a single-chip cache ignores it."""
         with self._lock:
             if pin is not None:
                 self._pins[key.graph_id] = pin
@@ -420,6 +425,24 @@ class TieredSegmentCache:
                 if self.directory is not None:
                     self.directory.unpublish(key, self.worker_id)
             self._insert_device(key, _Entry(value, int(nbytes)), tms)
+
+    def discard(self, key: SegmentKey) -> bool:
+        """Silently drop `key` from both tiers — no stats, no modeled
+        transfers. Used by the sharded wrapper when a placement override
+        moves a key off its previous owner shard (the move itself is
+        charged by the caller)."""
+        with self._lock:
+            entry = self._device.pop(key, None)
+            if entry is not None:
+                self._device_used -= entry.nbytes
+                return True
+            entry = self._host.pop(key, None)
+            if entry is not None:
+                self._host_used -= entry.nbytes
+                if self.directory is not None:
+                    self.directory.unpublish(key, self.worker_id)
+                return True
+            return False
 
     def _account(self, store, delta: int) -> None:
         if store is self._device:

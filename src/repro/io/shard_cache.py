@@ -29,7 +29,7 @@ charged and every call delegates straight through.
 from __future__ import annotations
 
 import zlib
-from typing import Any, Callable, Hashable, List, Optional, Sequence
+from typing import Any, Callable, Dict, Hashable, List, Optional, Sequence
 
 from repro.io.segment_cache import (
     CacheDirectory,
@@ -39,7 +39,13 @@ from repro.io.segment_cache import (
     demote_to_host,
     promote_to_device,
 )
-from repro.io.tiers import MemoryTier, Path, TieredMemorySystem
+from repro.io.tiers import (
+    ICI_ALL_TO_ALL,
+    ICITopology,
+    MemoryTier,
+    Path,
+    TieredMemorySystem,
+)
 
 
 def shard_of(key: SegmentKey, n_shards: int) -> int:
@@ -99,6 +105,7 @@ class ShardedSegmentCache:
         worker_id: Hashable = 0,
         demote: Callable[[Any], Any] = demote_to_host,
         promote: Callable[[Any], Any] = promote_to_device,
+        topology: ICITopology = ICI_ALL_TO_ALL,
     ):
         if n_shards < 1:
             raise ValueError("n_shards must be >= 1")
@@ -121,10 +128,13 @@ class ShardedSegmentCache:
         self.tms = tms
         self.directory = directory
         self.worker_id = worker_id
+        self.topology = topology
         per_dev = self.device_budget_bytes // self.n_shards
+        self._per_shard_device = per_dev
         per_host = self.host_budget_bytes
         if per_host is not None and self.n_shards > 1:
             per_host = max(1, per_host // self.n_shards)
+        self._per_shard_host = per_host
         self.shards: List[TieredSegmentCache] = []
         for s in range(self.n_shards):
             dev = self.devices[s] if self.devices is not None else None
@@ -139,6 +149,11 @@ class ShardedSegmentCache:
         self._remote_hits = 0
         self._ici_bytes = 0
         self.last_get_transfer_s: float = 0.0
+        # Placement overrides (the owner map): keys whose owner differs
+        # from the CRC default because a put() carried an explicit shard —
+        # the shard-placement rewrite pass pins a graph's hot bricks to the
+        # shard that consumes them. Queried via `owner_of`.
+        self._locations: Dict[SegmentKey, int] = {}
 
     @classmethod
     def from_mesh(cls, mesh, device_budget_bytes: int, axis: str = "cache",
@@ -189,11 +204,43 @@ class ShardedSegmentCache:
     def tier_of(self, key: SegmentKey) -> Optional[MemoryTier]:
         return self._owner(key).tier_of(key)
 
+    def owner_of(self, key: SegmentKey) -> int:
+        """The shard that owns (or would own) `key`: a placement override
+        if one was recorded by `put(..., shard=...)`, else the
+        deterministic CRC owner. This is the owner-map query the
+        shard-placement rewrite pass builds on."""
+        return self._locations.get(key, shard_of(key, self.n_shards))
+
     def shard_index_of(self, key: SegmentKey) -> int:
-        return shard_of(key, self.n_shards)
+        return self.owner_of(key)
+
+    @property
+    def shard_budget_bytes(self) -> int:
+        """Device budget of each independent shard."""
+        return self._per_shard_device
+
+    def shard_headroom(self, shard: int) -> int:
+        """Unused device-tier bytes on `shard` — what the placement pass
+        may still pin there for free warm hits."""
+        return self._per_shard_device - self.shards[shard].device_used_bytes
+
+    def shard_host_headroom(self, shard: int) -> float:
+        """Unused host-tier bytes on `shard` (inf when unbounded). A
+        brick's owner shard matters even on the host tier — a
+        remote-owner host hit pays promotion *plus* the ICI ship — but
+        host placement is the placement pass's last resort: a device-
+        resident brick anywhere beats a host promotion."""
+        if self._per_shard_host is None:
+            return float("inf")
+        return self._per_shard_host - self.shards[shard].host_used_bytes
+
+    def ici_hops(self, shard: int) -> int:
+        """Links between `shard` and the local shard under the cache's
+        `ICITopology` (0 for the local shard itself)."""
+        return self.topology.hops(shard, self.local_shard, self.n_shards)
 
     def _owner(self, key: SegmentKey) -> TieredSegmentCache:
-        return self.shards[shard_of(key, self.n_shards)]
+        return self.shards[self.owner_of(key)]
 
     # ---- maintenance -----------------------------------------------------
 
@@ -202,13 +249,22 @@ class ShardedSegmentCache:
             shard.pin(graph_id, obj)
 
     def invalidate_graph(self, graph_id: Hashable) -> int:
+        self._drop_locations(str(graph_id), exact=graph_id)
         return sum(s.invalidate_graph(graph_id) for s in self.shards)
 
     def invalidate_prefix(self, prefix: str, exact: Hashable = None) -> int:
+        self._drop_locations(prefix, exact=exact)
         return sum(s.invalidate_prefix(prefix, exact=exact)
                    for s in self.shards)
 
+    def _drop_locations(self, prefix: str, exact: Hashable = None) -> None:
+        for key in [k for k in self._locations
+                    if k.graph_id == exact
+                    or str(k.graph_id).startswith(prefix)]:
+            del self._locations[key]
+
     def clear(self) -> None:
+        self._locations.clear()
         for shard in self.shards:
             shard.clear()
 
@@ -229,50 +285,77 @@ class ShardedSegmentCache:
 
     def get_with_cost(self, key: SegmentKey, nbytes: int = 0,
                       tms: Optional[TieredMemorySystem] = None):
-        """(value, transfer_seconds). A remote-shard hit adds the ICI hop to
-        the owner shard's own promotion cost (if any)."""
-        s = shard_of(key, self.n_shards)
+        """(value, transfer_seconds). A remote-shard hit adds the ICI hop(s)
+        to the owner shard's own promotion cost (if any)."""
+        s = self.owner_of(key)
         value, cost = self.shards[s].get_with_cost(key, nbytes=nbytes,
                                                    tms=tms)
         if value is not None and s != self.local_shard:
+            hops = self.ici_hops(s)
             self._remote_hits += 1
-            self._ici_bytes += nbytes
-            cost += self._charge_ici(tms, nbytes, "cache/ici")
+            self._ici_bytes += nbytes * hops
+            cost += self._charge_ici(tms, nbytes, "cache/ici", hops=hops)
             if self.devices is not None:
                 value = _place(value, self.devices[self.local_shard])
         self.last_get_transfer_s = cost
         return value, cost
 
     def peek_cost(self, key: SegmentKey, nbytes: int = 0,
-                  tms: Optional[TieredMemorySystem] = None):
+                  tms: Optional[TieredMemorySystem] = None,
+                  shard: Optional[int] = None):
         """Price a get WITHOUT performing it (see
         `TieredSegmentCache.peek_cost`). A remote-owned key adds the ICI
-        hop a hit would ride — or, on a miss, the shard-place ship the
-        subsequent put() would pay."""
-        s = shard_of(key, self.n_shards)
+        hop(s) a hit would ride — or, on a miss, the shard-place ship the
+        subsequent put() would pay; `shard` is the placement override that
+        put would carry (`CacheProbeOp.place_shard`), so an estimate prices
+        the rewritten plan, not the CRC default."""
+        s = self.owner_of(key)
         hit, cost = self.shards[s].peek_cost(key, nbytes=nbytes, tms=tms)
-        if s != self.local_shard:
-            cost += self._charge_ici(
-                tms, nbytes, "cache/ici" if hit else "cache/shard-place")
+        if hit:
+            if s != self.local_shard:
+                cost += self._charge_ici(tms, nbytes, "cache/ici",
+                                         hops=self.ici_hops(s))
+        else:
+            dst = s if shard is None else int(shard)
+            if dst != self.local_shard:
+                cost += self._charge_ici(tms, nbytes, "cache/shard-place",
+                                         hops=self.ici_hops(dst))
         return hit, cost
 
     def put(self, key: SegmentKey, value: Any, nbytes: int,
             tms: Optional[TieredMemorySystem] = None,
-            pin: Any = None) -> None:
+            pin: Any = None, shard: Optional[int] = None) -> None:
         """Insert at the owner shard; a remote owner costs one ICI ship of
-        the fresh brick (the upload landed on the local chip first)."""
-        s = shard_of(key, self.n_shards)
-        if s != self.local_shard:
-            self._ici_bytes += nbytes
-            self._charge_ici(tms, nbytes, "cache/shard-place")
+        the fresh brick (the upload landed on the local chip first).
+
+        `shard` overrides the CRC owner — the shard-placement pass pins a
+        plan's bricks to the shard that streams them. The override is
+        recorded in the owner map so later get/peek calls resolve to the
+        real location, and any stale copy at the previous owner is dropped.
+        """
+        cur = self.owner_of(key)
+        dst = cur if shard is None else int(shard)
+        if not 0 <= dst < self.n_shards:
+            raise ValueError(f"placement shard {dst} outside "
+                             f"[0, {self.n_shards})")
+        if dst != cur:
+            self.shards[cur].discard(key)
+        if dst != shard_of(key, self.n_shards):
+            self._locations[key] = dst
+        else:
+            self._locations.pop(key, None)
+        if dst != self.local_shard:
+            hops = self.ici_hops(dst)
+            self._ici_bytes += nbytes * hops
+            self._charge_ici(tms, nbytes, "cache/shard-place", hops=hops)
             if self.devices is not None:
-                value = _place(value, self.devices[s])
-        self.shards[s].put(key, value, nbytes, tms=tms, pin=pin)
+                value = _place(value, self.devices[dst])
+        self.shards[dst].put(key, value, nbytes, tms=tms, pin=pin)
 
     def _charge_ici(self, tms: Optional[TieredMemorySystem], nbytes: int,
-                    tag: str) -> float:
+                    tag: str, hops: int = 1) -> float:
         tms = tms if tms is not None else self.tms
         if tms is None or nbytes <= 0:
             return 0.0
         return tms.transfer(Path.ICI, MemoryTier.DEVICE, MemoryTier.DEVICE,
-                            int(nbytes), tag=tag)
+                            int(nbytes), tag=tag, hops=hops)

@@ -40,6 +40,46 @@ class Path(enum.Enum):
 
 
 @dataclasses.dataclass(frozen=True)
+class ICITopology:
+    """Inter-chip link topology: how many links a chip-to-chip transfer
+    crosses.
+
+    The flat-link model every ICI charge used before is exactly the
+    ``all_to_all`` case (every pair of chips one hop apart). ``ring`` is the
+    TPU-slice reality for a 1-D mesh axis: chip i reaches chip j over
+    min(|i-j|, n-|i-j|) links. `TieredMemorySystem.transfer(..., hops=h)`
+    prices an h-hop transfer as h per-link setup latencies plus one
+    bandwidth term (the payload is pipelined link to link, but every link
+    it crosses carries — and accounts — the bytes).
+
+    Shared by the cost model (`ShardedSegmentCache` charges remote hits and
+    shard placements at the owner's hop distance) and the shard-placement
+    rewrite pass (`repro.core.passes.ShardPlacementPass` uses the same hop
+    counts to prefer near shards when the local one is full).
+    """
+
+    kind: str = "all_to_all"   # "all_to_all" | "ring"
+
+    def __post_init__(self):
+        if self.kind not in ("all_to_all", "ring"):
+            raise ValueError(f"unknown ICI topology kind {self.kind!r} "
+                             "(expected 'all_to_all' or 'ring')")
+
+    def hops(self, src: int, dst: int, n_chips: int) -> int:
+        """Links crossed from chip `src` to chip `dst` on an `n_chips` axis."""
+        if src == dst:
+            return 0
+        if self.kind == "all_to_all" or n_chips <= 2:
+            return 1
+        d = abs(int(src) - int(dst)) % n_chips
+        return min(d, n_chips - d)
+
+
+ICI_ALL_TO_ALL = ICITopology("all_to_all")
+ICI_RING = ICITopology("ring")
+
+
+@dataclasses.dataclass(frozen=True)
 class TierSpec:
     """Capacities in bytes, bandwidths in bytes/second."""
 
@@ -150,16 +190,26 @@ class TieredMemorySystem:
 
     # ---- transfer -------------------------------------------------------
     def transfer(self, path: Path, src: MemoryTier, dst: MemoryTier,
-                 nbytes: int, tag: str = "") -> float:
+                 nbytes: int, tag: str = "", hops: int = 1) -> float:
+        """Charge one transfer; returns its modeled seconds.
+
+        `hops` > 1 models a multi-link topology hop (see `ICITopology`):
+        the payload pays the per-link setup latency once per link and one
+        bandwidth term (links are pipelined), while the byte accounting
+        counts the payload on every link it crossed — that is the wire
+        traffic the interconnect really carried.
+        """
+        hops = max(int(hops), 1)
         bw = self.spec.bw[path]
-        secs = self.spec.latency_s[path] + nbytes / bw
+        secs = self.spec.latency_s[path] * hops + nbytes / bw
+        wire = int(nbytes) * hops
         if self.keep_records:
             self.transfers.append(
-                TransferRecord(path, src, dst, nbytes, secs, tag))
+                TransferRecord(path, src, dst, wire, secs, tag))
         self.busy_s[path] += secs
-        self._bytes_by_path[path] += nbytes
+        self._bytes_by_path[path] += wire
         self._seconds_by_path[path] += secs
-        self._total_bytes += nbytes
+        self._total_bytes += wire
         return secs
 
     # ---- reporting (Fig. 7 / Fig. 8) ------------------------------------

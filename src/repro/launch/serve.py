@@ -51,7 +51,8 @@ def serve(cfg, params, prompts: np.ndarray, steps: int = 8):
 
 def serve_gcn(scale: float = 1e-4, batch: int = 4, epochs: int = 2,
               cache: bool = True, feature_dim: int = 16, seed: int = 0,
-              cache_shards: int = 1, workers: int = 1):
+              cache_shards: int = 1, workers: int = 1,
+              passes: bool = False):
     """Drive the multi-graph GCN serving engine; returns per-epoch reports.
 
     `cache_shards > 1` partitions each worker's cache device tier across
@@ -60,6 +61,10 @@ def serve_gcn(scale: float = 1e-4, batch: int = 4, epochs: int = 2,
     demoted bricks serve the others' misses. With one worker the reports
     are a flat per-epoch list (back-compat); with several, a list of
     per-epoch lists, one report per worker.
+
+    `passes` routes every batch through the plan-rewrite pipeline
+    (repro.core.passes): shard-aware brick placement, transfer coalescing
+    and earliest-deadline-first batch ordering.
     """
     from repro.data import (
         SUITESPARSE_SPECS, generate_graph, normalized_adjacency, scaled_spec,
@@ -67,7 +72,10 @@ def serve_gcn(scale: float = 1e-4, batch: int = 4, epochs: int = 2,
     from repro.io import CacheDirectory
     from repro.runtime import EngineConfig, InferenceRequest, ServingEngine
 
-    from repro.core import plan_memory_dense_features
+    from repro.core import (
+        EDFOrderingPass, ShardPlacementPass, TransferCoalescingPass,
+        plan_memory_dense_features,
+    )
 
     rng = np.random.default_rng(seed)
     graphs = {
@@ -83,11 +91,14 @@ def serve_gcn(scale: float = 1e-4, batch: int = 4, epochs: int = 2,
         for est in [plan_memory_dense_features(a, a.n_rows, 64,
                                                float("inf"))])
     directory = CacheDirectory() if workers > 1 else None
+    plan_passes = ([ShardPlacementPass(), TransferCoalescingPass(),
+                    EDFOrderingPass()] if passes else None)
     engines = []
     for wid in range(workers):
         eng = ServingEngine(
             EngineConfig(device_budget_bytes=budget, cache_enabled=cache,
-                         cache_shards=cache_shards, worker_id=wid),
+                         cache_shards=cache_shards, worker_id=wid,
+                         plan_passes=plan_passes),
             directory=directory)
         for name, a in graphs.items():
             eng.register_graph(name, a)
@@ -125,15 +136,22 @@ def main(argv=None) -> None:
     ap.add_argument("--workers", type=int, default=1,
                     help="gcn mode: replicated serving workers sharing a "
                          "CacheDirectory (dedups demotion copies)")
+    ap.add_argument("--passes", action="store_true",
+                    help="gcn mode: route batches through the plan-rewrite "
+                         "pipeline (shard placement, transfer coalescing, "
+                         "EDF batch ordering)")
     args = ap.parse_args(argv)
 
     if args.mode == "gcn":
         reports = serve_gcn(batch=args.batch, epochs=args.epochs,
                             cache=not args.no_cache,
                             cache_shards=args.cache_shards,
-                            workers=args.workers)
+                            workers=args.workers, passes=args.passes)
         for e, rep in enumerate(reports):
             for wid, r in enumerate(rep if isinstance(rep, list) else [rep]):
+                lat = r.request_latency
+                err = (sum(abs(l.error_s) for l in lat) / len(lat)
+                       if lat else 0.0)
                 print(f"epoch {e} worker {wid}: {len(r.results)} requests, "
                       f"{r.aggregation_passes} streamed passes, "
                       f"uploaded {r.uploaded_bytes} B, "
@@ -142,7 +160,8 @@ def main(argv=None) -> None:
                       f"ici {r.ici_bytes} B, "
                       f"peer-served {r.directory_hit_bytes} B, "
                       f"dup-avoided {r.duplicate_avoided_bytes} B, "
-                      f"hit rate {r.hit_rate:.0%}) in {r.wall_seconds:.2f}s")
+                      f"hit rate {r.hit_rate:.0%}) in {r.wall_seconds:.2f}s; "
+                      f"mean |predicted-actual| {err*1e3:.2f} ms")
         return
 
     if args.arch is None:

@@ -3,11 +3,13 @@ from repro.runtime.supervisor import (
 )
 from repro.runtime.engine import (
     AdmissionError, BatchReport, EngineConfig, InferenceRequest,
-    InferenceResult, RejectedRequest, ServingEngine, WarmStartReport,
+    InferenceResult, RejectedRequest, RequestLatency, ServingEngine,
+    SubmitReceipt, WarmStartReport,
 )
 
 __all__ = [
     "Supervisor", "SupervisorConfig", "ElasticMesh", "RunState",
     "AdmissionError", "BatchReport", "EngineConfig", "InferenceRequest",
-    "InferenceResult", "RejectedRequest", "ServingEngine", "WarmStartReport",
+    "InferenceResult", "RejectedRequest", "RequestLatency", "ServingEngine",
+    "SubmitReceipt", "WarmStartReport",
 ]

@@ -38,6 +38,7 @@ from repro.checkpoint.checkpointer import (
     load_segment_bricks,
     save_segment_bricks,
 )
+from repro.core.passes import PassPipeline, PlanPass
 from repro.core.spgemm import AiresConfig, AiresSpGEMM
 from repro.io.segment_cache import (
     CacheDirectory,
@@ -47,6 +48,8 @@ from repro.io.segment_cache import (
 )
 from repro.io.shard_cache import ShardedSegmentCache
 from repro.io.tiers import (
+    ICI_ALL_TO_ALL,
+    ICITopology,
     MemoryTier,
     Path,
     TieredMemorySystem,
@@ -93,6 +96,16 @@ class EngineConfig:
     # already-queued requests plus the new one exceeds this many modeled
     # seconds (None = unbounded queue, the pre-admission behavior).
     max_queue_cost_s: Optional[float] = None
+    # Plan-rewrite passes (repro.core.passes): a PassPipeline — or a
+    # sequence of PlanPass instances — applied to every stream plan before
+    # it is estimated or executed; an EDFOrderingPass in the pipeline
+    # additionally reorders run_batch() work earliest-deadline-first.
+    # None (default) and the empty pipeline reproduce pass-free behavior
+    # bit-exactly.
+    plan_passes: Optional["PassPipeline | Sequence[PlanPass]"] = None
+    # Inter-chip link topology for the sharded cache's ICI charges (ring
+    # vs all-to-all); all-to-all reproduces the former flat-link costing.
+    ici_topology: ICITopology = ICI_ALL_TO_ALL
 
 
 @dataclasses.dataclass
@@ -146,6 +159,48 @@ class AdmissionError(RuntimeError):
                if decision.deadline_s is not None else ""))
 
 
+class SubmitReceipt(int):
+    """What `submit()` returns: the request id (an int — fully
+    backward-compatible everywhere an id was expected) carrying the
+    `PipelinePlan.estimate()` cost admission control priced the request
+    with. 0.0 when no admission policy (deadline / queue cap) was in
+    force — submit() does not pay for plan preparation in that case; use
+    `ServingEngine.estimate_request_cost` for an on-demand prediction."""
+
+    estimated_cost_s: float
+
+    def __new__(cls, request_id: int, estimated_cost_s: float = 0.0):
+        obj = super().__new__(cls, request_id)
+        obj.estimated_cost_s = float(estimated_cost_s)
+        return obj
+
+
+@dataclasses.dataclass
+class RequestLatency:
+    """Predicted-vs-actual story of one served request.
+
+    `predicted_s` is the request's `PipelinePlan.estimate()` cost (one
+    streamed pass per layer — the number admission control uses).
+    `actual_s` is the wall-clock from the batch's start until this
+    request's output materialized — the user-visible in-batch latency,
+    which includes waiting for earlier graph groups (exactly what EDF
+    ordering shrinks for urgent requests). `processing_s` is the same
+    stamp measured from this request's *own graph group's* start — the
+    number comparable to `predicted_s` for cost-model calibration, since
+    the prediction prices only this request's streamed work."""
+
+    request_id: int
+    graph: str
+    predicted_s: float
+    actual_s: float
+    processing_s: float = 0.0
+
+    @property
+    def error_s(self) -> float:
+        """Calibration error: group-relative completion vs prediction."""
+        return self.processing_s - self.predicted_s
+
+
 @dataclasses.dataclass
 class WarmStartReport:
     """What warm_start() restored into the segment cache."""
@@ -179,6 +234,9 @@ class BatchReport:
     # ran them.
     rejected: List[RejectedRequest] = dataclasses.field(default_factory=list)
     expired: List[RejectedRequest] = dataclasses.field(default_factory=list)
+    # Predicted-vs-actual latency per served request (request_id order).
+    request_latency: List[RequestLatency] = dataclasses.field(
+        default_factory=list)
 
     @property
     def bus_bytes(self) -> int:
@@ -215,6 +273,18 @@ class ServingEngine:
                  mesh=None):
         self.config = config
         self.directory = directory
+        # Plan-rewrite pipeline every batch's stream plans route through
+        # (build → rewrite → interpret). A bare sequence of passes is
+        # wrapped here; track_costs=False keeps per-stream estimates off
+        # the serving hot path (scheduler runs still report deltas).
+        pp = config.plan_passes
+        if pp is None:
+            self.plan_pipeline: Optional[PassPipeline] = None
+        elif isinstance(pp, PassPipeline):
+            self.plan_pipeline = pp
+        else:
+            self.plan_pipeline = PassPipeline(
+                list(pp), spec=config.tier_spec, track_costs=False)
         # All modeled I/O this engine performs outside a stream's own
         # accounting window — cache demote/promote churn, warm-start loads —
         # lands here, so `tms.bytes_by_path()` stays honest from the first
@@ -240,13 +310,15 @@ class ServingEngine:
                 self.cache = ShardedSegmentCache.from_mesh(
                     mesh, device_bytes, axis=config.cache_shard_axis,
                     host_budget_bytes=config.cache_host_bytes, tms=self.tms,
-                    directory=directory, worker_id=config.worker_id)
+                    directory=directory, worker_id=config.worker_id,
+                    topology=config.ici_topology)
             elif config.cache_shards > 1:
                 self.cache = ShardedSegmentCache(
                     device_budget_bytes=device_bytes,
                     host_budget_bytes=config.cache_host_bytes,
                     n_shards=config.cache_shards, tms=self.tms,
-                    directory=directory, worker_id=config.worker_id)
+                    directory=directory, worker_id=config.worker_id,
+                    topology=config.ici_topology)
             else:
                 self.cache = TieredSegmentCache(
                     device_budget_bytes=device_bytes,
@@ -280,7 +352,8 @@ class ServingEngine:
                 interpret=cfg.interpret,
                 plan_features=cfg.max_batch_features,
             ),
-            segment_cache=self.cache)
+            segment_cache=self.cache,
+            plan_passes=self.plan_pipeline)
 
     def evict_graph(self, name: str) -> List[InferenceRequest]:
         """Drop a graph, its engine, its cached segments (every namespace,
@@ -410,7 +483,10 @@ class ServingEngine:
 
     # ---- request queue ---------------------------------------------------
 
-    def submit(self, request: InferenceRequest) -> int:
+    def submit(self, request: InferenceRequest) -> SubmitReceipt:
+        """Queue a request; returns its id as a `SubmitReceipt` (an int)
+        carrying the admission-control cost prediction, so callers see the
+        latency estimate the engine already computed for them."""
         if request.graph not in self._graphs:
             raise KeyError(f"graph {request.graph!r} not registered")
         n = self._graphs[request.graph].n_rows
@@ -434,7 +510,7 @@ class ServingEngine:
             submitted_s=time.monotonic())
         self._next_id += 1
         self._queue.append(request)
-        return request.request_id
+        return SubmitReceipt(request.request_id, est)
 
     def infer(self, graph: str, features: np.ndarray,
               weights: Sequence[np.ndarray] = ()) -> np.ndarray:
@@ -475,18 +551,42 @@ class ServingEngine:
         ]
         expired_ids = {d.request_id for d in expired}
         queue = [r for r in queue if r.request_id not in expired_ids]
+        # Per-request latency prediction: requests an admission policy did
+        # not already price are priced now — the estimate shares the plan
+        # preparation the stream below needs anyway (memoized per
+        # graph × width), so this costs one cheap cost-interpretation.
+        for r in queue:
+            if r.estimated_cost_s <= 0.0:
+                r.estimated_cost_s = self.estimate_request_cost(r)
+        # Deadline-aware ordering: an EDFOrderingPass in the configured
+        # pipeline reorders the drained queue (earliest deadline first,
+        # Moore–Hodgson tardy demotion over the predictions above), and
+        # graph groups then run in first-appearance order of that queue.
+        # Without an ordering pass, registration order — byte-identical to
+        # the pre-pass engine.
+        if self.plan_pipeline is not None and self.plan_pipeline.orders_requests:
+            queue = self.plan_pipeline.order_requests(queue)
+            graph_order = list(dict.fromkeys(r.graph for r in queue))
+        else:
+            graph_order = list(self._graphs)  # registration order
         promoted = ici = dir_hits = 0
+        latency: List[RequestLatency] = []
         # Duplicate-avoided demotions happen inside put()/evictions, outside
         # any stream's stats window — diff the cache's cumulative counter.
         dup0 = (self.cache.stats.duplicate_avoided_bytes
                 if self.cache is not None else 0)
-        for name in self._graphs:  # registration order, deterministic
+        for name in graph_order:
             group = [r for r in queue if r.graph == name]
             if not group:
                 continue
             eng = self._engines[name]
             mark = len(eng.forward_stats_log)
-            results.extend(self._run_graph_group(name, group))
+            group_results, done_s = self._run_graph_group(name, group, t0)
+            results.extend(group_results)
+            latency.extend(
+                RequestLatency(r.request_id, name, r.estimated_cost_s,
+                               *done_s[r.request_id])
+                for r in group)
             for stats in eng.forward_stats_log[mark:]:
                 uploaded += stats.uploaded_bytes
                 hits += stats.cache_hit_bytes
@@ -496,6 +596,7 @@ class ServingEngine:
                 segments += stats.segments
                 passes += 1
         results.sort(key=lambda r: r.request_id)
+        latency.sort(key=lambda l: l.request_id)
         dup = ((self.cache.stats.duplicate_avoided_bytes - dup0)
                if self.cache is not None else 0)
         rejected, self._rejected = self._rejected, []
@@ -506,12 +607,16 @@ class ServingEngine:
             wall_seconds=time.perf_counter() - t0,
             ici_bytes=ici, directory_hit_bytes=dir_hits,
             duplicate_avoided_bytes=dup,
-            rejected=rejected, expired=expired)
+            rejected=rejected, expired=expired, request_latency=latency)
 
-    def _run_graph_group(self, name: str,
-                         group: List[InferenceRequest]) -> List[InferenceResult]:
+    def _run_graph_group(self, name: str, group: List[InferenceRequest],
+                         t0: float) -> tuple:
+        """Serve one graph's requests; returns (results, completion stamps
+        keyed by request id — `(since_batch_t0, since_group_start)` wall
+        seconds, taken when each request's output materializes on host)."""
         a = self._graphs[name]
         eng = self._engines[name]
+        g0 = time.perf_counter()
         # Per-request device-resident state: (request, activation, next layer).
         acts = [jnp.asarray(np.asarray(r.features, dtype=np.float32))
                 for r in group]
@@ -519,6 +624,7 @@ class ServingEngine:
                for r in group]
         n_aggs = [max(len(ws), 1) for ws in wss]
         outputs: Dict[int, np.ndarray] = {}
+        done_s: Dict[int, tuple] = {}
         for layer in range(max(n_aggs)):
             live = [i for i in range(len(group)) if layer < n_aggs[i]]
             aggregated = self._batched_aggregate(
@@ -534,8 +640,11 @@ class ServingEngine:
                 acts[i] = h
                 if layer == n_aggs[i] - 1:
                     outputs[i] = np.asarray(h)
-        return [InferenceResult(group[i].request_id, name, outputs[i])
-                for i in range(len(group))]
+                    now = time.perf_counter()
+                    done_s[group[i].request_id] = (now - t0, now - g0)
+        results = [InferenceResult(group[i].request_id, name, outputs[i])
+                   for i in range(len(group))]
+        return results, done_s
 
     def _batched_aggregate(self, eng: AiresSpGEMM, a: CSR,
                            hs: List[jnp.ndarray]) -> List[jnp.ndarray]:
