@@ -61,7 +61,7 @@ from repro.io.tiers import TierSpec
 __all__ = [
     "CoalescedPayload", "EDFOrderingPass", "PassContext", "PassPipeline",
     "PassReport", "PlanPass", "ShardPlacementPass", "TransferCoalescingPass",
-    "deadline_order", "edf_sort",
+    "deadline_order", "edf_sort", "remaining_deadline",
 ]
 
 
@@ -438,6 +438,19 @@ def deadline_order(items: Sequence[Any],
     return [items[i] for i in scheduled + tardy]
 
 
+def remaining_deadline(r: Any, now: float) -> Optional[float]:
+    """Seconds a request has left on its relative deadline, on one clock:
+    `InferenceRequest.deadline_s` counts from submit time, so two requests
+    submitted at different moments compare via `submitted_s + deadline_s −
+    now`. Unstamped requests (never passed `submit()`) fall back to the
+    raw relative field — their deadline starts counting now."""
+    d = getattr(r, "deadline_s", None)
+    if d is None:
+        return None
+    submitted = getattr(r, "submitted_s", -1.0)
+    return d if submitted < 0 else submitted + d - now
+
+
 class EDFOrderingPass(PlanPass):
     """Deadline-aware `run_batch` ordering.
 
@@ -452,24 +465,54 @@ class EDFOrderingPass(PlanPass):
     Deadlines are compared on one clock: `InferenceRequest.deadline_s` is
     *relative to submit time*, so two requests submitted at different
     moments cannot be ordered by the raw field — the pass converts each
-    to the seconds **remaining** now (`submitted_s + deadline_s − now`),
-    which is also the unit the Moore–Hodgson completion clock (cumulative
-    cost from batch start) is checked against.
+    to the seconds **remaining** now (`remaining_deadline`), which is also
+    the unit the Moore–Hodgson completion clock (cumulative cost from
+    batch start) is checked against.
+
+    `clock` defaults to `time.monotonic`; the continuous serving loop
+    passes its `VirtualClock` so remaining-time math runs on the replay
+    timeline. `order_groups` is the continuous loop's *queue-position*
+    variant: the schedulable unit is a whole column-concat group, priced
+    by `ServingEngine.estimate_group_cost`, so Moore–Hodgson's completion
+    clock accumulates whole-group costs — each group's deadline is checked
+    against its time-to-front (the modeled cost of every group ahead of
+    it), not just its within-round rank.
     """
 
     name = "edf-ordering"
 
+    def __init__(self, clock: Optional[Callable[[], float]] = None):
+        self.clock: Callable[[], float] = clock or time.monotonic
+
     def order_requests(self, requests: List[Any]) -> List[Any]:
-        now = time.monotonic()
-
-        def remaining(r):
-            d = getattr(r, "deadline_s", None)
-            if d is None:
-                return None
-            submitted = getattr(r, "submitted_s", -1.0)
-            return d if submitted < 0 else submitted + d - now
-
+        now = self.clock()
         return deadline_order(
             requests,
             cost_of=lambda r: getattr(r, "estimated_cost_s", 0.0),
-            deadline_of=remaining)
+            deadline_of=lambda r: remaining_deadline(r, now))
+
+    def order_groups(self, groups: Sequence[Any],
+                     cost_of: Callable[[Any], float]) -> List[Any]:
+        """Queue-position EDF over request groups. Each group's deadline is
+        the *tightest* remaining deadline among its members (the group
+        completes as a unit — column-concat passes finish together), its
+        cost the caller-supplied per-group `PipelinePlan.estimate()`
+        rollup. `deadline_order`'s running completion clock then *is* the
+        time-to-front of each group."""
+        now = self.clock()
+
+        def tightest(group) -> Optional[float]:
+            ds = [remaining_deadline(r, now) for r in _members(group)]
+            ds = [d for d in ds if d is not None]
+            return min(ds) if ds else None
+
+        return deadline_order(list(groups), cost_of, tightest)
+
+
+def _members(group: Any) -> Sequence[Any]:
+    """A group is either a bare request sequence or a (name, requests)
+    pair (the serving loop's shape); normalize to the request list."""
+    if (isinstance(group, tuple) and len(group) == 2
+            and isinstance(group[0], str)):
+        return group[1]
+    return group

@@ -120,9 +120,69 @@ def serve_gcn(scale: float = 1e-4, batch: int = 4, epochs: int = 2,
     return reports
 
 
+def serve_continuous(scale: float = 1e-4, trace: str = "poisson",
+                     requests: int = 24, seed: int = 0,
+                     feature_dim: int = 16):
+    """Replay an arrival trace through the continuous step loop.
+
+    Builds the same two-graph engine as `serve_gcn` but on a shared
+    `VirtualClock`, generates a Poisson or Gamma-modulated bursty trace
+    whose rate and deadlines are quoted in units of one modeled pass,
+    and streams it through a `ContinuousServer`. Returns the
+    `(ServeReport, summary_dict)` pair."""
+    from repro.data import (
+        SUITESPARSE_SPECS, generate_graph, normalized_adjacency, scaled_spec,
+    )
+    from repro.runtime import (
+        ContinuousServer, EngineConfig, InferenceRequest, ServingEngine,
+        VirtualClock, bursty_trace, poisson_trace, replay_continuous,
+        summarize,
+    )
+    from repro.core import EDFOrderingPass, plan_memory_dense_features
+
+    rng = np.random.default_rng(seed)
+    graphs = {
+        name: normalized_adjacency(generate_graph(
+            scaled_spec(SUITESPARSE_SPECS[name], scale), seed=i))
+        for i, name in enumerate(("socLJ1", "rUSA"))
+    }
+    budget = max(
+        int(est.m_b + est.m_c + 0.6 * a.nbytes())
+        for a in graphs.values()
+        for est in [plan_memory_dense_features(a, a.n_rows, 64,
+                                               float("inf"))])
+    clock = VirtualClock()
+    eng = ServingEngine(EngineConfig(
+        device_budget_bytes=budget, clock=clock,
+        plan_passes=[EDFOrderingPass(clock=clock)]))
+    for name, a in graphs.items():
+        eng.register_graph(name, a)
+
+    feats = {name: rng.standard_normal(
+        (a.n_rows, feature_dim)).astype(np.float32)
+        for name, a in graphs.items()}
+    weights = rng.standard_normal(
+        (feature_dim, feature_dim)).astype(np.float32)
+    unit = eng.estimate_request_cost(
+        InferenceRequest("socLJ1", feats["socLJ1"], [weights]))
+    maker = poisson_trace if trace == "poisson" else bursty_trace
+    rate_key = "rate_hz" if trace == "poisson" else "base_rate_hz"
+    arrivals = maker(n=requests, graphs=sorted(graphs), seed=seed,
+                     feature_dim=feature_dim, deadline_s=3.0 * unit,
+                     **{rate_key: 1.5 / unit})
+
+    def make_request(arr):
+        return InferenceRequest(arr.graph, feats[arr.graph], [weights],
+                                deadline_s=arr.deadline_s)
+
+    report = replay_continuous(ContinuousServer(eng), arrivals, make_request)
+    return report, summarize(report)
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=("lm", "gcn"), default="lm")
+    ap.add_argument("--mode", choices=("lm", "gcn", "continuous"),
+                    default="lm")
     ap.add_argument("--arch")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=8)
@@ -140,7 +200,28 @@ def main(argv=None) -> None:
                     help="gcn mode: route batches through the plan-rewrite "
                          "pipeline (shard placement, transfer coalescing, "
                          "EDF batch ordering)")
+    ap.add_argument("--trace", choices=("poisson", "bursty"),
+                    default="poisson",
+                    help="continuous mode: arrival process to replay")
+    ap.add_argument("--requests", type=int, default=24,
+                    help="continuous mode: number of arrivals in the trace")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.mode == "continuous":
+        _, summary = serve_continuous(trace=args.trace,
+                                      requests=args.requests,
+                                      seed=args.seed)
+        print(f"{args.trace} trace: {summary['served']}/{summary['offered']} "
+              f"served in {summary['groups_served']} groups, "
+              f"{summary['on_time']} on time "
+              f"(miss rate {summary['deadline_miss_rate']:.0%}); "
+              f"p50 {summary['p50_latency_s']*1e3:.2f} ms, "
+              f"p99 {summary['p99_latency_s']*1e3:.2f} ms, "
+              f"goodput {summary['goodput_rps']:.1f} req/s; "
+              f"uploaded {summary['uploaded_bytes']} B, "
+              f"cache-hit {summary['cache_hit_bytes']} B")
+        return
 
     if args.mode == "gcn":
         reports = serve_gcn(batch=args.batch, epochs=args.epochs,

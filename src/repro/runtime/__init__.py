@@ -2,14 +2,22 @@ from repro.runtime.supervisor import (
     Supervisor, SupervisorConfig, ElasticMesh, RunState,
 )
 from repro.runtime.engine import (
-    AdmissionError, BatchReport, EngineConfig, InferenceRequest,
+    AdmissionError, BatchReport, EngineConfig, GroupStats, InferenceRequest,
     InferenceResult, RejectedRequest, RequestLatency, ServingEngine,
     SubmitReceipt, WarmStartReport,
+)
+from repro.runtime.serving_loop import (
+    Arrival, ContinuousServer, ServeEvent, ServeReport, StepReport,
+    VirtualClock, bursty_trace, poisson_trace, replay_continuous,
+    replay_round, summarize,
 )
 
 __all__ = [
     "Supervisor", "SupervisorConfig", "ElasticMesh", "RunState",
-    "AdmissionError", "BatchReport", "EngineConfig", "InferenceRequest",
-    "InferenceResult", "RejectedRequest", "RequestLatency", "ServingEngine",
-    "SubmitReceipt", "WarmStartReport",
+    "AdmissionError", "BatchReport", "EngineConfig", "GroupStats",
+    "InferenceRequest", "InferenceResult", "RejectedRequest",
+    "RequestLatency", "ServingEngine", "SubmitReceipt", "WarmStartReport",
+    "Arrival", "ContinuousServer", "ServeEvent", "ServeReport", "StepReport",
+    "VirtualClock", "bursty_trace", "poisson_trace", "replay_continuous",
+    "replay_round", "summarize",
 ]

@@ -29,7 +29,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import OrderedDict
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 import jax.numpy as jnp
@@ -106,6 +106,11 @@ class EngineConfig:
     # Inter-chip link topology for the sharded cache's ICI charges (ring
     # vs all-to-all); all-to-all reproduces the former flat-link costing.
     ici_topology: ICITopology = ICI_ALL_TO_ALL
+    # Clock used for submit stamps, deadline expiry and EDF remaining-time
+    # math. None (default) = `time.monotonic`. The continuous serving loop
+    # (`repro.runtime.serving_loop`) injects a `VirtualClock` here so trace
+    # replays and admission control run on one deterministic timeline.
+    clock: Optional[Callable[[], float]] = None
 
 
 @dataclasses.dataclass
@@ -211,6 +216,37 @@ class WarmStartReport:
 
 
 @dataclasses.dataclass
+class GroupStats:
+    """I/O story of one served column-concat group (the per-group slice of
+    a BatchReport's byte accounting) — what `serve_group` returns to both
+    `run_batch` and the continuous serving loop."""
+
+    uploaded_bytes: int = 0
+    cache_hit_bytes: int = 0
+    promoted_bytes: int = 0
+    ici_bytes: int = 0
+    directory_hit_bytes: int = 0
+    segments_streamed: int = 0
+    aggregation_passes: int = 0
+
+    def accumulate(self, stats) -> None:
+        """Fold one stream's `StreamStats` into the group totals."""
+        self.uploaded_bytes += stats.uploaded_bytes
+        self.cache_hit_bytes += stats.cache_hit_bytes
+        self.promoted_bytes += stats.promoted_bytes
+        self.ici_bytes += stats.ici_bytes
+        self.directory_hit_bytes += stats.directory_hit_bytes
+        self.segments_streamed += stats.segments
+        self.aggregation_passes += 1
+
+    def merge(self, other: "GroupStats") -> None:
+        """Fold another group's totals into these (batch-level rollup)."""
+        for f in dataclasses.fields(self):
+            setattr(self, f.name,
+                    getattr(self, f.name) + getattr(other, f.name))
+
+
+@dataclasses.dataclass
 class BatchReport:
     """One run_batch() drain: results + the I/O story of the batch."""
 
@@ -273,6 +309,10 @@ class ServingEngine:
                  mesh=None):
         self.config = config
         self.directory = directory
+        # Submit stamps, expiry and queue-position math all read this one
+        # clock; a VirtualClock here puts the whole admission story on a
+        # deterministic replay timeline.
+        self.clock: Callable[[], float] = config.clock or time.monotonic
         # Plan-rewrite pipeline every batch's stream plans route through
         # (build → rewrite → interpret). A bare sequence of passes is
         # wrapped here; track_costs=False keeps per-stream estimates off
@@ -469,8 +509,42 @@ class ServingEngine:
             widths.append(int(w.shape[1]))
         return sum(self._pass_cost(request.graph, wd) for wd in widths)
 
+    def estimate_group_cost(self, name: str, group: Sequence[InferenceRequest]
+                            ) -> float:
+        """Modeled seconds for one column-concat group of requests against
+        `name`: mirrors `_batched_aggregate`'s greedy chunking exactly —
+        per layer level, live request widths pack into passes capped at
+        `max_batch_features`, each pass priced by the memoized
+        `PipelinePlan.estimate()` cost at its concatenated width. This is
+        the per-group cost the continuous loop's queue-position EDF
+        accumulates into time-to-front."""
+        cap = self.config.max_batch_features
+        per_req: List[List[int]] = []
+        for r in group:
+            ws = list(r.weights)
+            per_req.append([int(r.features.shape[1])]
+                           + [int(np.asarray(w).shape[1]) for w in ws[:-1]])
+        total = 0.0
+        for layer in range(max((len(lv) for lv in per_req), default=0)):
+            width = 0
+            for lv in per_req:
+                if layer >= len(lv):
+                    continue
+                f = lv[layer]
+                if width and width + f > cap:
+                    total += self._pass_cost(name, width)
+                    width = 0
+                width += f
+            if width:
+                total += self._pass_cost(name, width)
+        return total
+
     def queued_cost_s(self) -> float:
-        """Estimated cost of everything currently on the queue."""
+        """Estimated cost of everything still awaiting service. In the
+        round engine the queue empties only at a drain; under the
+        continuous loop served groups leave it step by step, so the
+        `max_queue_cost_s` backpressure prices the *remaining* queue, not
+        a round snapshot."""
         return sum(r.estimated_cost_s for r in self._queue)
 
     def _reject(self, request: InferenceRequest, reason: str,
@@ -507,69 +581,120 @@ class ServingEngine:
             self._reject(request, "queue-full", est)
         request = dataclasses.replace(
             request, request_id=self._next_id, estimated_cost_s=est,
-            submitted_s=time.monotonic())
+            submitted_s=self.clock())
         self._next_id += 1
         self._queue.append(request)
         return SubmitReceipt(request.request_id, est)
 
     def infer(self, graph: str, features: np.ndarray,
-              weights: Sequence[np.ndarray] = ()) -> np.ndarray:
+              weights: Sequence[np.ndarray] = (),
+              deadline_s: Optional[float] = None) -> np.ndarray:
         """Convenience: run one request immediately, without draining (or
-        disturbing) other callers' queued requests."""
+        disturbing) other callers' queued requests.
+
+        Admission verdicts accumulated from *other* callers' submits since
+        the last batch are stashed across the internal drain and restored
+        for the next real `run_batch` report — they must not vanish into
+        the private report this method discards. If this request itself
+        cannot produce a result (its own deadline expired before the
+        internal batch ran), an `AdmissionError` naming the expiry is
+        raised instead of an opaque `StopIteration`.
+        """
         pending, self._queue = self._queue, []
+        foreign, self._rejected = self._rejected, []
         try:
-            rid = self.submit(InferenceRequest(graph, features, weights))
+            rid = self.submit(InferenceRequest(graph, features, weights,
+                                               deadline_s=deadline_s))
             report = self.run_batch()
         finally:
+            # Restore other callers' state: their queued requests, and the
+            # verdicts whose BatchReport has not happened yet (plus this
+            # call's own submit-rejection, if submit() raised above — that
+            # verdict surfaces in the next real report, as usual).
             self._queue = pending + self._queue
-        return next(r.output for r in report.results if r.request_id == rid)
+            self._rejected = foreign + self._rejected
+        for r in report.results:
+            if r.request_id == rid:
+                return r.output
+        for verdict in report.expired:
+            if verdict.request_id == rid:
+                raise AdmissionError(verdict)
+        raise RuntimeError(
+            f"infer request {int(rid)} on graph {graph!r} produced no "
+            f"result and no expiry verdict — the internal batch returned "
+            f"{len(report.results)} result(s) for other ids")
 
     # ---- batched execution -----------------------------------------------
+    #
+    # run_batch() is a composition of three reusable pieces — group-form
+    # (`prepare_queue` + `order_queue`), group-run (`serve_group`) — which
+    # the continuous serving loop (repro.runtime.serving_loop) drives one
+    # group at a time instead of as a full drain.
+
+    def prepare_queue(self, queue: List[InferenceRequest], now: float
+                      ) -> Tuple[List[InferenceRequest],
+                                 List[RejectedRequest]]:
+        """Group-form step 1: stamp, expire, price. Returns the serve-ready
+        queue (new `InferenceRequest` copies — caller-held objects are
+        never mutated) and the expiry verdicts.
+
+          * a request that reached the queue without passing ``submit()``
+            (e.g. an `evict_graph` orphan re-queued directly) still holds
+            the ``submitted_s = -1.0`` sentinel; it is stamped `now` on
+            first sight so its relative deadline starts counting here
+            instead of instantly expiring against the monotonic epoch;
+          * a request whose relative deadline passed while it waited is
+            dropped, not run — it could only waste the batch's budget
+            producing an answer nobody can use;
+          * requests no admission policy already priced get their
+            `estimated_cost_s` filled via `dataclasses.replace` — the
+            estimate shares the plan preparation the stream needs anyway
+            (memoized per graph × width).
+        """
+        ready: List[InferenceRequest] = []
+        expired: List[RejectedRequest] = []
+        for r in queue:
+            if r.submitted_s < 0.0:
+                r = dataclasses.replace(r, submitted_s=now)
+            if r.deadline_s is not None and now - r.submitted_s > r.deadline_s:
+                expired.append(RejectedRequest(
+                    graph=r.graph, reason="deadline-expired",
+                    estimated_cost_s=r.estimated_cost_s,
+                    deadline_s=r.deadline_s, request_id=r.request_id))
+                continue
+            if r.estimated_cost_s <= 0.0:
+                r = dataclasses.replace(
+                    r, estimated_cost_s=self.estimate_request_cost(r))
+            ready.append(r)
+        return ready, expired
+
+    def order_queue(self, queue: List[InferenceRequest]
+                    ) -> Tuple[List[InferenceRequest], List[str]]:
+        """Group-form step 2: deadline-aware ordering. An EDFOrderingPass
+        in the configured pipeline reorders the queue (earliest deadline
+        first, Moore–Hodgson tardy demotion over `estimated_cost_s`), and
+        graph groups then run in first-appearance order of that queue.
+        Without an ordering pass, registration order — byte-identical to
+        the pre-pass engine."""
+        if (self.plan_pipeline is not None
+                and self.plan_pipeline.orders_requests):
+            queue = self.plan_pipeline.order_requests(queue)
+            return queue, list(dict.fromkeys(r.graph for r in queue))
+        return queue, list(self._graphs)  # registration order
 
     def run_batch(self) -> BatchReport:
         """Drain the queue: group by graph, batch aggregations per layer."""
         queue, self._queue = self._queue, []
         results: List[InferenceResult] = []
-        uploaded = hits = segments = passes = 0
         t0 = time.perf_counter()
         unknown = sorted({r.graph for r in queue} - set(self._graphs))
         if unknown:
             self._queue = queue + self._queue  # nothing consumed
             raise KeyError(
                 f"queued requests reference unregistered graphs {unknown}")
-        # Deadline expiry: a request whose relative deadline passed while it
-        # waited is dropped here, not run — it could only waste the batch's
-        # budget producing an answer nobody can use.
-        now = time.monotonic()
-        expired = [
-            RejectedRequest(graph=r.graph, reason="deadline-expired",
-                            estimated_cost_s=r.estimated_cost_s,
-                            deadline_s=r.deadline_s, request_id=r.request_id)
-            for r in queue
-            if r.deadline_s is not None
-            and now - r.submitted_s > r.deadline_s
-        ]
-        expired_ids = {d.request_id for d in expired}
-        queue = [r for r in queue if r.request_id not in expired_ids]
-        # Per-request latency prediction: requests an admission policy did
-        # not already price are priced now — the estimate shares the plan
-        # preparation the stream below needs anyway (memoized per
-        # graph × width), so this costs one cheap cost-interpretation.
-        for r in queue:
-            if r.estimated_cost_s <= 0.0:
-                r.estimated_cost_s = self.estimate_request_cost(r)
-        # Deadline-aware ordering: an EDFOrderingPass in the configured
-        # pipeline reorders the drained queue (earliest deadline first,
-        # Moore–Hodgson tardy demotion over the predictions above), and
-        # graph groups then run in first-appearance order of that queue.
-        # Without an ordering pass, registration order — byte-identical to
-        # the pre-pass engine.
-        if self.plan_pipeline is not None and self.plan_pipeline.orders_requests:
-            queue = self.plan_pipeline.order_requests(queue)
-            graph_order = list(dict.fromkeys(r.graph for r in queue))
-        else:
-            graph_order = list(self._graphs)  # registration order
-        promoted = ici = dir_hits = 0
+        queue, expired = self.prepare_queue(queue, self.clock())
+        queue, graph_order = self.order_queue(queue)
+        totals = GroupStats()
         latency: List[RequestLatency] = []
         # Duplicate-avoided demotions happen inside put()/evictions, outside
         # any stream's stats window — diff the cache's cumulative counter.
@@ -579,43 +704,40 @@ class ServingEngine:
             group = [r for r in queue if r.graph == name]
             if not group:
                 continue
-            eng = self._engines[name]
-            mark = len(eng.forward_stats_log)
-            group_results, done_s = self._run_graph_group(name, group, t0)
+            group_results, done_s, stats = self.serve_group(name, group, t0)
             results.extend(group_results)
             latency.extend(
                 RequestLatency(r.request_id, name, r.estimated_cost_s,
                                *done_s[r.request_id])
                 for r in group)
-            for stats in eng.forward_stats_log[mark:]:
-                uploaded += stats.uploaded_bytes
-                hits += stats.cache_hit_bytes
-                promoted += stats.promoted_bytes
-                ici += stats.ici_bytes
-                dir_hits += stats.directory_hit_bytes
-                segments += stats.segments
-                passes += 1
+            totals.merge(stats)
         results.sort(key=lambda r: r.request_id)
         latency.sort(key=lambda l: l.request_id)
         dup = ((self.cache.stats.duplicate_avoided_bytes - dup0)
                if self.cache is not None else 0)
         rejected, self._rejected = self._rejected, []
         return BatchReport(
-            results=results, uploaded_bytes=uploaded, cache_hit_bytes=hits,
-            promoted_bytes=promoted, segments_streamed=segments,
-            aggregation_passes=passes,
+            results=results, uploaded_bytes=totals.uploaded_bytes,
+            cache_hit_bytes=totals.cache_hit_bytes,
+            promoted_bytes=totals.promoted_bytes,
+            segments_streamed=totals.segments_streamed,
+            aggregation_passes=totals.aggregation_passes,
             wall_seconds=time.perf_counter() - t0,
-            ici_bytes=ici, directory_hit_bytes=dir_hits,
+            ici_bytes=totals.ici_bytes,
+            directory_hit_bytes=totals.directory_hit_bytes,
             duplicate_avoided_bytes=dup,
             rejected=rejected, expired=expired, request_latency=latency)
 
-    def _run_graph_group(self, name: str, group: List[InferenceRequest],
-                         t0: float) -> tuple:
-        """Serve one graph's requests; returns (results, completion stamps
-        keyed by request id — `(since_batch_t0, since_group_start)` wall
-        seconds, taken when each request's output materializes on host)."""
+    def serve_group(self, name: str, group: List[InferenceRequest],
+                    t0: float) -> tuple:
+        """Group-run: serve one graph's requests through the column-concat
+        streamed passes; returns (results, completion stamps keyed by
+        request id — `(since_batch_t0, since_group_start)` wall seconds,
+        taken when each request's output materializes on host — and the
+        group's `GroupStats` byte accounting)."""
         a = self._graphs[name]
         eng = self._engines[name]
+        mark = len(eng.forward_stats_log)
         g0 = time.perf_counter()
         # Per-request device-resident state: (request, activation, next layer).
         acts = [jnp.asarray(np.asarray(r.features, dtype=np.float32))
@@ -644,7 +766,10 @@ class ServingEngine:
                     done_s[group[i].request_id] = (now - t0, now - g0)
         results = [InferenceResult(group[i].request_id, name, outputs[i])
                    for i in range(len(group))]
-        return results, done_s
+        stats = GroupStats()
+        for s in eng.forward_stats_log[mark:]:
+            stats.accumulate(s)
+        return results, done_s, stats
 
     def _batched_aggregate(self, eng: AiresSpGEMM, a: CSR,
                            hs: List[jnp.ndarray]) -> List[jnp.ndarray]:

@@ -699,3 +699,91 @@ def test_gcn_epoch_simulate_accepts_segment_cache(quickstart_graph):
     assert warm.epoch_makespan_s < base.epoch_makespan_s
     assert warm.epoch_makespan_s <= cold.epoch_makespan_s
     assert sum(m.cache_hit_bytes for m in warm.per_layer) > 0
+
+
+# ---- admission/report-accounting bugfixes (ISSUE 6 satellites) -----------
+
+def test_infer_after_queue_expiry_raises_admission_error(quickstart_graph):
+    """infer() whose own request expires before the internal batch runs
+    must raise an AdmissionError naming the expiry — not leak a bare
+    StopIteration out of a result search."""
+    a = quickstart_graph
+    calls = {"n": 0}
+
+    def clock():
+        # First read stamps submit(); every later read (run_batch's
+        # prepare_queue) lands far past the 60 s relative deadline.
+        calls["n"] += 1
+        return 0.0 if calls["n"] == 1 else 1e9
+
+    eng = _engine(a, clock=clock)
+    eng.register_graph("g", a)
+    h = np.random.default_rng(0).standard_normal(
+        (a.n_rows, 8)).astype(np.float32)
+    with pytest.raises(AdmissionError) as ei:
+        eng.infer("g", h, deadline_s=60.0)
+    assert ei.value.decision.reason == "deadline-expired"
+    assert eng._queue == [] and eng._rejected == []
+
+
+def test_infer_preserves_foreign_admission_verdicts(quickstart_graph):
+    """Rejection verdicts from *other* callers' submits must survive an
+    interleaved infer() and surface in the next real BatchReport instead
+    of vanishing into the private report infer() discards."""
+    rng = np.random.default_rng(1)
+    a = quickstart_graph
+    probe = _engine(a)
+    probe.register_graph("g", a)
+    h = [rng.standard_normal((a.n_rows, 8)).astype(np.float32)
+         for _ in range(3)]
+    est = probe.estimate_request_cost(InferenceRequest("g", h[0]))
+    # Room for one queued request (est <= cap) but not two (2*est > cap).
+    eng = _engine(a, max_queue_cost_s=1.5 * est)
+    eng.register_graph("g", a)
+    rid = eng.submit(InferenceRequest("g", h[0]))
+    with pytest.raises(AdmissionError):
+        eng.submit(InferenceRequest("g", h[1]))      # queue-full verdict
+    out = eng.infer("g", h[2])                       # interleaved caller
+    np.testing.assert_allclose(out, _reference_chain(a, h[2], []), atol=1e-4)
+    report = eng.run_batch()
+    assert [r.request_id for r in report.results] == [rid]
+    assert [v.reason for v in report.rejected] == ["queue-full"]
+
+
+def test_run_batch_leaves_caller_requests_unmutated(quickstart_graph):
+    """Queue preparation prices/stamps engine-side copies; the caller's
+    own InferenceRequest objects stay untouched."""
+    rng = np.random.default_rng(2)
+    a = quickstart_graph
+    eng = _engine(a)
+    eng.register_graph("g", a)
+    submitted = InferenceRequest(
+        "g", rng.standard_normal((a.n_rows, 8)).astype(np.float32),
+        deadline_s=120.0)
+    eng.submit(submitted)
+    direct = InferenceRequest(
+        "g", rng.standard_normal((a.n_rows, 8)).astype(np.float32))
+    eng._queue.append(direct)                        # e.g. an orphan re-queue
+    report = eng.run_batch()
+    assert len(report.results) == 2
+    assert submitted.estimated_cost_s == 0.0
+    assert submitted.submitted_s == -1.0
+    assert submitted.request_id == -1
+    assert direct.estimated_cost_s == 0.0
+    assert direct.submitted_s == -1.0
+
+
+def test_direct_requeue_deadline_not_instantly_expired(quickstart_graph):
+    """A deadline-bearing request that reaches the queue without passing
+    submit() (submitted_s still the -1.0 sentinel) is stamped on first
+    sight, not expired against the monotonic epoch."""
+    rng = np.random.default_rng(3)
+    a = quickstart_graph
+    eng = _engine(a, clock=lambda: 1e6)   # epoch far beyond any deadline
+    eng.register_graph("g", a)
+    eng._queue.append(InferenceRequest(
+        "g", rng.standard_normal((a.n_rows, 8)).astype(np.float32),
+        deadline_s=60.0))
+    report = eng.run_batch()
+    assert report.expired == []
+    assert len(report.results) == 1

@@ -1,0 +1,244 @@
+"""Continuous-batching serving loop (repro.runtime.serving_loop).
+
+The headline assertions mirror ISSUE 6's acceptance criteria:
+  * continuous outputs are exact vs the dense reference chain;
+  * a mid-stream submit joins the next *forming* group instead of
+    waiting for a full drain;
+  * backpressure prices the *remaining* queue — a rejected submit is
+    admitted again after one step drains a group;
+  * queue-position EDF serves an urgent late arrival before earlier
+    loose-deadline groups;
+  * on seeded bursty traces the continuous arm never serves fewer
+    requests on time than the round-based engine;
+  * on a single-burst uniform-width trace both arms stream identical
+    uploaded/cache-hit byte totals (same groups, same passes).
+"""
+import numpy as np
+import pytest
+
+from repro.core import EDFOrderingPass, plan_memory_dense_features
+from repro.runtime import (
+    AdmissionError, ContinuousServer, EngineConfig, InferenceRequest,
+    ServingEngine, VirtualClock, bursty_trace, poisson_trace,
+    replay_continuous, replay_round, summarize,
+)
+from repro.sparse.ref_spgemm import spgemm_csr_dense
+
+
+@pytest.fixture(scope="module")
+def quickstart_graph():
+    from repro.data import (
+        SUITESPARSE_SPECS, generate_graph, normalized_adjacency, scaled_spec,
+    )
+
+    return normalized_adjacency(generate_graph(
+        scaled_spec(SUITESPARSE_SPECS["socLJ1"], 1e-4), seed=0))
+
+
+@pytest.fixture(scope="module")
+def road_graph():
+    from repro.data import (
+        SUITESPARSE_SPECS, generate_graph, normalized_adjacency, scaled_spec,
+    )
+
+    return normalized_adjacency(generate_graph(
+        scaled_spec(SUITESPARSE_SPECS["rUSA"], 2e-5), seed=1))
+
+
+def _budget(graphs):
+    return max(
+        int(est.m_b + est.m_c + 0.6 * a.nbytes())
+        for a in graphs.values()
+        for est in [plan_memory_dense_features(a, a.n_rows, 64,
+                                               float("inf"))])
+
+
+def _engine(graphs, clock, **overrides):
+    kw = dict(device_budget_bytes=_budget(graphs), clock=clock,
+              plan_passes=[EDFOrderingPass(clock=clock)])
+    kw.update(overrides)
+    eng = ServingEngine(EngineConfig(**kw))
+    for name, a in graphs.items():
+        eng.register_graph(name, a)
+    return eng
+
+
+def _feats(rng, a, width):
+    return rng.standard_normal((a.n_rows, width)).astype(np.float32)
+
+
+# ---- clock + step mechanics ----------------------------------------------
+
+def test_virtual_clock_is_monotonic():
+    clock = VirtualClock(1.0)
+    assert clock() == 1.0
+    clock.advance(0.5)
+    assert clock() == 1.5
+    clock.advance_to(1.5)            # no-op advance is fine
+    with pytest.raises(ValueError):
+        clock.advance_to(1.0)
+    with pytest.raises(ValueError):
+        clock.advance(-0.1)
+    assert clock() == 1.5
+
+
+def test_attach_requires_clean_queue_on_foreign_clock(quickstart_graph):
+    """An engine that already queued work on a different clock holds
+    stamps the loop's virtual timeline can't interpret."""
+    a = quickstart_graph
+    eng = ServingEngine(EngineConfig(device_budget_bytes=_budget({"g": a})))
+    eng.register_graph("g", a)
+    eng.submit(InferenceRequest(
+        "g", _feats(np.random.default_rng(0), a, 8)))
+    with pytest.raises(ValueError, match="different.*clock"):
+        ContinuousServer(eng)
+
+
+def test_continuous_outputs_match_dense_reference(quickstart_graph):
+    rng = np.random.default_rng(4)
+    a = quickstart_graph
+    server = ContinuousServer(_engine({"g": a}, VirtualClock()))
+    assert server.step() is None                 # idle loop is a no-op
+    hs = [_feats(rng, a, 16) for _ in range(3)]
+    w = rng.standard_normal((16, 8)).astype(np.float32)
+    rids = [int(server.submit(InferenceRequest("g", h, [w]))) for h in hs]
+    steps = server.drain()
+    outs = {r.request_id: r.output for s in steps for r in s.results}
+    assert sorted(outs) == sorted(rids)
+    for rid, h in zip(rids, hs):
+        np.testing.assert_allclose(
+            outs[rid], spgemm_csr_dense(a, h) @ w, atol=1e-4)
+    report = server.report()
+    assert report.served == 3 and report.on_time == 3
+    assert report.makespan_s > 0.0               # modeled costs moved time
+
+
+def test_midstream_submit_joins_next_forming_group(quickstart_graph):
+    """Cap 64: two width-40 requests form separate groups; a width-16
+    request submitted after the first step rides the second group."""
+    rng = np.random.default_rng(5)
+    a = quickstart_graph
+    server = ContinuousServer(_engine({"g": a}, VirtualClock()))
+    r1 = int(server.submit(InferenceRequest("g", _feats(rng, a, 40))))
+    r2 = int(server.submit(InferenceRequest("g", _feats(rng, a, 40))))
+    s1 = server.step()
+    assert [e.request_id for e in s1.events] == [r1]
+    r3 = int(server.submit(InferenceRequest("g", _feats(rng, a, 16))))
+    s2 = server.step()
+    assert sorted(e.request_id for e in s2.events) == sorted([r2, r3])
+    assert server.step() is None
+
+
+def test_backpressure_prices_remaining_queue(quickstart_graph):
+    """max_queue_cost_s admits again as soon as a step drains a group —
+    the continuous loop's whole point vs round-snapshot pricing."""
+    rng = np.random.default_rng(6)
+    a = quickstart_graph
+    probe = ContinuousServer(_engine({"g": a}, VirtualClock()))
+    est = probe.engine.estimate_request_cost(
+        InferenceRequest("g", _feats(rng, a, 48)))
+    server = ContinuousServer(_engine(
+        {"g": a}, VirtualClock(), max_queue_cost_s=2.5 * est))
+    server.submit(InferenceRequest("g", _feats(rng, a, 48)))
+    server.submit(InferenceRequest("g", _feats(rng, a, 48)))
+    with pytest.raises(AdmissionError):          # 3*est > 2.5*est
+        server.submit(InferenceRequest("g", _feats(rng, a, 48)))
+    assert server.step() is not None             # one width-48 group leaves
+    rid = server.submit(InferenceRequest("g", _feats(rng, a, 48)))
+    assert int(rid) >= 0
+    server.drain()
+    report = server.report()
+    assert report.served == 3
+    assert [v.reason for v in report.rejected] == ["queue-full"]
+
+
+def test_edf_serves_urgent_group_before_loose_backlog(quickstart_graph,
+                                                      road_graph):
+    """Queue-position EDF at group granularity: a tight-deadline arrival
+    on one graph overtakes an earlier loose-deadline backlog on another."""
+    rng = np.random.default_rng(7)
+    graphs = {"g": quickstart_graph, "road": road_graph}
+    clock = VirtualClock()
+    server = ContinuousServer(_engine(graphs, clock))
+    est = server.engine.estimate_request_cost(
+        InferenceRequest("road", _feats(rng, road_graph, 16)))
+    server.submit(InferenceRequest(
+        "g", _feats(rng, quickstart_graph, 16), deadline_s=100.0))
+    server.submit(InferenceRequest(
+        "g", _feats(rng, quickstart_graph, 16), deadline_s=100.0))
+    server.submit(InferenceRequest(
+        "road", _feats(rng, road_graph, 16), deadline_s=5.0 * est))
+    step = server.step()
+    assert step.graph == "road"
+    server.drain()
+    assert server.report().on_time == 3
+
+
+# ---- round vs continuous on shared traces --------------------------------
+
+def _make_workload(rng, graphs, widths, hidden=8):
+    feats = {(n, w): _feats(rng, a, w)
+             for n, a in graphs.items() for w in widths}
+    weights = {w: rng.standard_normal((w, hidden)).astype(np.float32)
+               for w in widths}
+
+    def make_request(arr):
+        return InferenceRequest(
+            arr.graph, feats[(arr.graph, arr.feature_dim)],
+            [weights[arr.feature_dim]], deadline_s=arr.deadline_s)
+
+    return make_request
+
+
+def _unit(graphs, make_request):
+    from repro.runtime.serving_loop import Arrival
+
+    probe = _engine(graphs, VirtualClock())
+    name = max(graphs, key=lambda n: graphs[n].n_rows)
+    return probe.estimate_request_cost(
+        make_request(Arrival(0.0, name, 32)))
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_continuous_on_time_never_below_round(quickstart_graph, road_graph,
+                                              seed):
+    """On the same bursty trace, admitting between every group must not
+    serve fewer requests on time than admitting between full drains."""
+    graphs = {"g": quickstart_graph, "road": road_graph}
+    rng = np.random.default_rng(10)
+    widths = (16, 32, 48)
+    make_request = _make_workload(rng, graphs, widths)
+    unit = _unit(graphs, make_request)
+    trace = bursty_trace(n=36, base_rate_hz=3.5 / unit,
+                         graphs=sorted(graphs), seed=seed,
+                         feature_dim=widths, deadline_s=3.0 * unit,
+                         burst_shape=0.25, episode=12)
+    r_round = replay_round(_engine(graphs, VirtualClock()),
+                           trace, make_request)
+    r_cont = replay_continuous(
+        ContinuousServer(_engine(graphs, VirtualClock())),
+        trace, make_request)
+    s_round, s_cont = summarize(r_round), summarize(r_cont)
+    assert s_round["offered"] == s_cont["offered"] == 36
+    assert s_cont["on_time"] >= s_round["on_time"]
+
+
+def test_single_burst_byte_accounting_matches_round(quickstart_graph,
+                                                    road_graph):
+    """One tight burst of uniform-width no-deadline requests: both arms
+    form the same column-concat groups in the same order, so uploaded and
+    cache-hit wire bytes must agree exactly."""
+    graphs = {"g": quickstart_graph, "road": road_graph}
+    rng = np.random.default_rng(11)
+    make_request = _make_workload(rng, graphs, widths=(16,))
+    trace = poisson_trace(n=12, rate_hz=1e9, graphs=sorted(graphs),
+                          seed=2, feature_dim=16)
+    r_round = replay_round(_engine(graphs, VirtualClock()),
+                           trace, make_request)
+    r_cont = replay_continuous(
+        ContinuousServer(_engine(graphs, VirtualClock())),
+        trace, make_request)
+    assert r_round.served == r_cont.served == 12
+    assert r_cont.stats.uploaded_bytes == r_round.stats.uploaded_bytes
+    assert r_cont.stats.cache_hit_bytes == r_round.stats.cache_hit_bytes
+    assert r_cont.stats.aggregation_passes == r_round.stats.aggregation_passes
