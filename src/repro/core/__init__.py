@@ -49,8 +49,10 @@ from repro.core.passes import (
 from repro.core.robw import (
     RoBWPlan,
     RoBWSegment,
+    densify_segment,
     merge_partial_rows,
     naive_partition,
+    robw_delta_partition,
     robw_partition,
     robw_transpose_plan,
     segments_to_block_ell,
@@ -64,7 +66,9 @@ from repro.core.scheduler import (
     ScheduleResult,
     UCGScheduler,
 )
-from repro.core.spgemm import AiresConfig, AiresSpGEMM, EpochMetrics, gcn_epoch
+from repro.core.spgemm import (
+    AiresConfig, AiresSpGEMM, EpochMetrics, UpdateStats, gcn_epoch,
+)
 
 __all__ = [
     "FeatureSpec", "MemoryEstimate", "calc_mem", "ell_bucket_capacity",
@@ -72,8 +76,9 @@ __all__ = [
     "plan_memory_dense_features", "plan_memory_spec", "plan_memory_unified",
     "required_bytes",
     "segment_budget",
-    "RoBWPlan", "RoBWSegment", "merge_partial_rows", "naive_partition",
-    "robw_partition", "robw_transpose_plan", "segments_to_block_ell",
+    "RoBWPlan", "RoBWSegment", "densify_segment", "merge_partial_rows",
+    "naive_partition", "robw_delta_partition", "robw_partition",
+    "robw_transpose_plan", "segments_to_block_ell",
     "SCHEDULERS", "AiresScheduler", "ETCScheduler", "MaxMemoryScheduler",
     "ScheduleMetrics", "ScheduleResult", "UCGScheduler",
     "AllocOp", "CacheProbeOp", "ComputeOp", "CostInterpreter",
@@ -82,5 +87,5 @@ __all__ = [
     "CoalescedPayload", "EDFOrderingPass", "PassContext", "PassPipeline",
     "PassReport", "PlanPass", "ShardPlacementPass", "TransferCoalescingPass",
     "deadline_order", "edf_sort",
-    "AiresConfig", "AiresSpGEMM", "EpochMetrics", "gcn_epoch",
+    "AiresConfig", "AiresSpGEMM", "EpochMetrics", "UpdateStats", "gcn_epoch",
 ]

@@ -153,6 +153,34 @@ def naive_partition(a: CSR, m_a_bytes: int, value_bytes: Optional[int] = None,
     return cuts
 
 
+def densify_segment(
+    a: CSR,
+    seg: RoBWSegment,
+    bm: int = 128,
+    bk: int = 128,
+    dtype: np.dtype = np.float32,
+    bucketed: bool = True,
+) -> BlockELL:
+    """Tile-densify one RoBW segment of `a` into a BlockELL brick.
+
+    The single re-tile primitive shared by the full pass
+    (`segments_to_block_ell`) and the delta path (`AiresSpGEMM.
+    apply_edge_update`): both produce bit-identical bricks for the same
+    rows, which is what makes delta-updated bricks interchangeable with a
+    from-scratch re-tile.
+    """
+    sub = csr_row_slice(a, seg.row_start, seg.row_end)
+    ell = tile_csr_to_block_ell(sub, bm=bm, bk=bk, ell_width=None, dtype=dtype)
+    if bucketed:
+        cap = ell_bucket_capacity(ell.ell_width)
+        if cap != ell.ell_width:
+            pad = cap - ell.ell_width
+            ell.blocks = np.pad(ell.blocks, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            ell.col_tile = np.pad(ell.col_tile, ((0, 0), (0, pad)),
+                                  constant_values=-1)
+    return ell
+
+
 def segments_to_block_ell(
     a: CSR,
     plan: RoBWPlan,
@@ -167,16 +195,75 @@ def segments_to_block_ell(
     segments in the same bucket share a compiled kernel (DESIGN §2).
     """
     for seg in plan.segments:
-        sub = csr_row_slice(a, seg.row_start, seg.row_end)
-        ell = tile_csr_to_block_ell(sub, bm=bm, bk=bk, ell_width=None, dtype=dtype)
-        if bucketed:
-            cap = ell_bucket_capacity(ell.ell_width)
-            if cap != ell.ell_width:
-                pad = cap - ell.ell_width
-                ell.blocks = np.pad(ell.blocks, ((0, 0), (0, pad), (0, 0), (0, 0)))
-                ell.col_tile = np.pad(ell.col_tile, ((0, 0), (0, pad)),
-                                      constant_values=-1)
-        yield ell
+        yield densify_segment(a, seg, bm=bm, bk=bk, dtype=dtype,
+                              bucketed=bucketed)
+
+
+def robw_delta_partition(
+    a_new: CSR,
+    old_plan: RoBWPlan,
+    touched_rows,
+    value_bytes: Optional[int] = None,
+    index_bytes: int = 4,
+) -> tuple:
+    """Incremental RoBW re-partition after an edge delta.
+
+    `a_new` is the updated CSR (same row count as the graph `old_plan`
+    partitioned); `touched_rows` are the rows whose content changed
+    (`EdgeDelta.touched_rows`, or `.touched_cols` for a transposed plan).
+    Returns ``(plan, reuse)`` where ``reuse[i]`` is the old segment index
+    whose rows — and bricks — new segment ``i`` reuses verbatim, or None if
+    the segment covers touched rows and must re-tile.
+
+    Untouched segments are copied boundary-for-boundary (their content is
+    bit-identical, so their bricks and fingerprints stay valid). Maximal
+    runs of touched segments are merged into one span and re-partitioned by
+    `robw_partition` under the *old* plan's budget and alignment — work
+    proportional to the touched span, not the graph. Because each span is
+    re-packed greedily in isolation, a delta plan's boundaries inside a
+    span may differ from a from-scratch global re-plan; the bricks it
+    yields are still exactly `densify_segment` of their rows, and every
+    segment still respects the budget.
+    """
+    if value_bytes is None:
+        value_bytes = int(a_new.data.dtype.itemsize)
+    segs_old = old_plan.segments
+    touched = np.unique(np.asarray(touched_rows, dtype=np.int64).ravel())
+    if touched.size and (touched[0] < 0 or touched[-1] >= a_new.n_rows):
+        raise IndexError(f"touched rows outside [0, {a_new.n_rows})")
+    row_starts = np.array([s.row_start for s in segs_old], dtype=np.int64)
+    touched_mask = np.zeros(len(segs_old), dtype=bool)
+    if touched.size:
+        hit = np.searchsorted(row_starts, touched, side="right") - 1
+        touched_mask[np.unique(hit)] = True
+    segments: List[RoBWSegment] = []
+    reuse: List[Optional[int]] = []
+    i = 0
+    while i < len(segs_old):
+        if not touched_mask[i]:
+            segments.append(dataclasses.replace(segs_old[i]))
+            reuse.append(i)
+            i += 1
+            continue
+        j = i
+        while j < len(segs_old) and touched_mask[j]:
+            j += 1
+        span_start = segs_old[i].row_start
+        span_end = segs_old[j - 1].row_end
+        sub = csr_row_slice(a_new, span_start, span_end)
+        sub_plan = robw_partition(sub, old_plan.budget_bytes,
+                                  align=old_plan.align,
+                                  value_bytes=value_bytes,
+                                  index_bytes=index_bytes)
+        for s in sub_plan.segments:
+            segments.append(RoBWSegment(
+                row_start=s.row_start + span_start,
+                row_end=s.row_end + span_start,
+                nnz=s.nnz, nbytes=s.nbytes))
+            reuse.append(None)
+        i = j
+    return (RoBWPlan(segments=segments, align=old_plan.align,
+                     budget_bytes=old_plan.budget_bytes), reuse)
 
 
 def merge_partial_rows(prev_tail: np.ndarray, head: np.ndarray) -> np.ndarray:

@@ -37,6 +37,8 @@ from repro.core.pipeline import (
     modeled_spgemm_seconds,
 )
 from repro.core.robw import (
+    densify_segment,
+    robw_delta_partition,
     robw_partition,
     robw_transpose_plan,
     segments_to_block_ell,
@@ -49,7 +51,13 @@ from repro.io.segment_cache import SegmentKey, TieredSegmentCache
 from repro.io.shard_cache import ShardedSegmentCache
 from repro.io.streamer import StreamStats
 from repro.io.tiers import MemoryTier, Path, TierSpec, TPU_V5E_SYSTEM
-from repro.sparse.formats import CSR, csr_fingerprint
+from repro.sparse.formats import (
+    CSR,
+    csr_fingerprint,
+    graph_cache_prefix,
+    segment_fingerprint,
+)
+from repro.sparse.updates import EdgeDelta
 
 # Both tiered caches speak the same get/put protocol; the engine and the
 # epoch runner accept either (mesh-sharded device tier included).
@@ -84,6 +92,24 @@ class _Prepared:
     segs: List[object]
     ells: List[object]
     cache_ns: str = ""        # segment-cache namespace (graph+direction+plan)
+    # Per-segment content fingerprints (segment_fingerprint of each
+    # segment's rows) — the content half of every SegmentKey this plan
+    # emits; the delta-update path preserves them for reused segments.
+    fps: List[str] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class UpdateStats:
+    """What one `AiresSpGEMM.apply_edge_update` changed, summed over every
+    prepared plan (direction × width) of the updated graph."""
+
+    plans_updated: int = 0
+    segments_retiled: int = 0
+    segments_reused: int = 0
+    retiled_bytes: int = 0        # wire bytes of the re-densified bricks
+    # Cache keys the update made stale (old keys absent from the updated
+    # plans) — exactly what the runtime must invalidate, nothing more.
+    stale_keys: List[SegmentKey] = dataclasses.field(default_factory=list)
 
 
 class AiresSpGEMM:
@@ -159,8 +185,11 @@ class AiresSpGEMM:
 
         Content-addressed (`csr_fingerprint`), not ``id(a)``: ids are
         recycled after GC, and a stable prefix is what lets checkpointed
-        bricks warm-start a *fresh* process's cache (the keys survive)."""
-        return f"g{csr_fingerprint(a)}:{a.nnz}:{a.shape[0]}x{a.shape[1]}"
+        bricks warm-start a *fresh* process's cache (the keys survive).
+        Updated graphs keep their ancestor's prefix (`CSR.graph_key`
+        lineage) so untouched segment keys survive edge deltas — see
+        `repro.sparse.formats.graph_cache_prefix`."""
+        return graph_cache_prefix(a)
 
     # ---- host-side preparation (cached per graph × feature shape) --------
     #
@@ -230,7 +259,9 @@ class AiresSpGEMM:
             a=stream_a, mem=mem, plan=plan, segs=list(plan.segments),
             ells=list(segments_to_block_ell(stream_a, plan,
                                             bm=cfg.bm, bk=cfg.bk)),
-            cache_ns=cache_ns)
+            cache_ns=cache_ns,
+            fps=[segment_fingerprint(stream_a, s.row_start, s.row_end)
+                 for s in plan.segments])
         if self.segment_cache is not None:
             # Pin the source graph so the id()-derived namespace can't be
             # recycled into stale hits while cached bricks live.
@@ -239,6 +270,80 @@ class AiresSpGEMM:
         while len(self._prepared) > self.PREPARED_CACHE_MAX:
             self._prepared.pop(next(iter(self._prepared)))
         return prepared
+
+    # ---- incremental updates (evolving graphs) ---------------------------
+
+    def _segment_keys(self, prepared: _Prepared) -> List[SegmentKey]:
+        """Every SegmentKey one prepared plan emits (mirrors
+        `_build_stream_plan`'s key construction exactly)."""
+        cfg = self.config
+        return [SegmentKey(prepared.cache_ns, i, cfg.wire_format,
+                           tuple(ell.blocks.shape), fingerprint=fp)
+                for i, (ell, fp) in enumerate(zip(prepared.ells,
+                                                  prepared.fps))]
+
+    def apply_edge_update(self, old: CSR, new: CSR,
+                          delta: EdgeDelta) -> UpdateStats:
+        """Migrate every prepared plan of `old` to `new` incrementally.
+
+        For each cached preparation (forward plans re-tile by
+        `delta.touched_rows`, transposed plans by `delta.touched_cols`):
+        untouched segments keep their bricks and fingerprints verbatim;
+        touched spans re-partition under the old budget
+        (`robw_delta_partition`) and re-densify only their rows
+        (`densify_segment` — bit-identical to a from-scratch re-tile of the
+        same rows). The cache namespace carries over unchanged (`new`
+        inherits `old`'s `graph_key` lineage), so the untouched segments'
+        cache entries keep hitting; re-placed bricks flow through
+        `ShardPlacementPass` on the next stream like any not-yet-resident
+        segment. Returns the stale keys the caller must invalidate.
+        """
+        old_fp = csr_fingerprint(old)
+        cfg = self.config
+        stats = UpdateStats()
+        for key in [k for k in self._prepared if k[0] == old_fp]:
+            prep = self._prepared.pop(key)
+            _, _, _, plan_shape, transpose = key
+            if transpose:
+                stream_new = self.transpose_of(new)
+                touched = delta.touched_cols
+            else:
+                stream_new = new
+                touched = delta.touched_rows
+            new_plan, reuse = robw_delta_partition(stream_new, prep.plan,
+                                                   touched)
+            segs, ells, fps = [], [], []
+            for seg, src in zip(new_plan.segments, reuse):
+                segs.append(seg)
+                if src is not None:
+                    ells.append(prep.ells[src])
+                    fps.append(prep.fps[src])
+                    stats.segments_reused += 1
+                else:
+                    ell = densify_segment(stream_new, seg,
+                                          bm=cfg.bm, bk=cfg.bk)
+                    ells.append(ell)
+                    fps.append(segment_fingerprint(
+                        stream_new, seg.row_start, seg.row_end))
+                    stats.segments_retiled += 1
+                    stats.retiled_bytes += ell.nbytes()
+            old_keys = self._segment_keys(prep)
+            # mem is reused: the budget (and Eq. 5 split) depends on shape
+            # and width, both unchanged by an edge delta; the re-packed
+            # spans were re-partitioned under the same m_a.
+            new_prep = _Prepared(a=stream_new, mem=prep.mem, plan=new_plan,
+                                 segs=segs, ells=ells,
+                                 cache_ns=prep.cache_ns, fps=fps)
+            self._prepared[(csr_fingerprint(new), new.nnz, new.shape,
+                            plan_shape, transpose)] = new_prep
+            if self.segment_cache is not None:
+                # Re-pin: the namespace now answers for the updated graph.
+                self.segment_cache.pin(prep.cache_ns, new)
+            fresh = set(self._segment_keys(new_prep))
+            stats.stale_keys.extend(k for k in old_keys if k not in fresh)
+            stats.plans_updated += 1
+        self._transposes.pop((old_fp, old.nnz, old.shape), None)
+        return stats
 
     # ---- pipeline-plan building + streaming executors --------------------
 
@@ -280,8 +385,9 @@ class AiresSpGEMM:
             miss = TransferOp(Path.DMA, MemoryTier.HOST, MemoryTier.DEVICE,
                               nbytes, tag="phaseII/seg", payload=(i, ell))
             if cached:
+                fp = prepared.fps[i] if i < len(prepared.fps) else ""
                 key = SegmentKey(prepared.cache_ns, i, cfg.wire_format,
-                                 tuple(ell.blocks.shape))
+                                 tuple(ell.blocks.shape), fingerprint=fp)
                 i_io = plan.add(CacheProbeOp(key, nbytes, miss,
                                              payload=(i, ell)),
                                 "stream", LANE_DMA)

@@ -15,6 +15,7 @@ from repro.io.segment_cache import (
     CacheStats,
     SegmentKey,
     TieredSegmentCache,
+    prefix_matches,
 )
 from repro.io.shard_cache import ShardedSegmentCache, shard_of
 
@@ -23,5 +24,6 @@ __all__ = [
     "MemoryTier", "TierSpec", "TieredMemorySystem", "TransferRecord",
     "PAPER_GPU_SYSTEM", "TPU_V5E_SYSTEM", "DoubleBufferedStreamer",
     "StreamStats", "CacheDirectory", "CacheStats", "SegmentKey",
-    "TieredSegmentCache", "ShardedSegmentCache", "shard_of",
+    "TieredSegmentCache", "ShardedSegmentCache", "prefix_matches",
+    "shard_of",
 ]

@@ -35,6 +35,29 @@ class SegmentKey:
     segment_id: Hashable     # (plan token, index-in-plan)
     wire_format: str         # "bricks" | "csr"
     shape: Tuple[int, ...]   # wire-payload shape (disambiguates re-plans)
+    # Per-segment content fingerprint (`segment_fingerprint` of the rows the
+    # brick encodes). For evolving graphs, `graph_id` names the *lineage*
+    # (stable across edge deltas) and this field carries content identity:
+    # a delta changes only the touched segments' fingerprints, so untouched
+    # bricks keep hitting. "" = legacy/content-agnostic key. Deliberately
+    # EXCLUDED from `shard_of` owner hashing (io/shard_cache.py), so adding
+    # it did not reshuffle shard placement.
+    fingerprint: str = ""
+
+
+def prefix_matches(graph_id: Hashable, prefix: str,
+                   exact: Hashable = None) -> bool:
+    """Does `graph_id` belong to the namespace family named by `prefix`?
+
+    Delimiter-aware: matches the id itself or any `:`-separated extension
+    of it (`g12:fwd:w64` under prefix `g12`), but never a sibling whose id
+    merely shares leading characters (`g123:…` under `g12` — the
+    invalidation-collision bug). `exact` additionally matches a
+    non-string id by equality."""
+    if exact is not None and graph_id == exact:
+        return True
+    gid = str(graph_id)
+    return gid == prefix or gid.startswith(prefix + ":")
 
 
 @dataclasses.dataclass
@@ -170,6 +193,30 @@ class CacheDirectory:
             if entry is not None and entry[0] == worker_id:
                 del self._entries[key]
 
+    def drop(self, key: SegmentKey) -> bool:
+        """Drop the record for `key` regardless of who holds it.
+
+        The delta-update invalidation path: when a graph update makes a
+        segment key stale, *every* worker's published copy of it is stale —
+        including peers' — and `unpublish` (holder-checked) cannot reach
+        those. Returns whether a record existed."""
+        with self._lock:
+            return self._entries.pop(key, None) is not None
+
+    def drop_prefix(self, prefix: str, worker_id: Hashable = None) -> int:
+        """Drop every record whose graph_id falls under `prefix`
+        (delimiter-aware, see `prefix_matches`); with `worker_id`, only
+        that worker's holdings. This is what `evict_graph` calls so peers
+        are never routed a peer-promote for entries the evicting worker no
+        longer backs. Returns the number of records dropped."""
+        with self._lock:
+            victims = [k for k, (holder, _, _) in self._entries.items()
+                       if prefix_matches(k.graph_id, prefix)
+                       and (worker_id is None or holder == worker_id)]
+            for k in victims:
+                del self._entries[k]
+            return len(victims)
+
     def fetch(self, key: SegmentKey,
               exclude: Hashable = None) -> Optional[Tuple[Any, Hashable, int]]:
         """(host value, holder, nbytes) if a worker ≠ `exclude` holds it."""
@@ -273,22 +320,40 @@ class TieredSegmentCache:
         return self.invalidate_prefix(str(graph_id), exact=graph_id)
 
     def invalidate_prefix(self, prefix: str, exact: Hashable = None) -> int:
-        """Drop entries whose graph_id is `exact` or startswith `prefix` —
-        one graph spans several namespaces (direction × plan width), all
-        sharing the graph-identity prefix."""
+        """Drop entries whose graph_id is `exact` or a `:`-delimited
+        extension of `prefix` — one graph spans several namespaces
+        (direction × plan width), all sharing the graph-identity prefix.
+        Matching is delimiter-aware (`prefix_matches`): a graph whose
+        fingerprint happens to be a leading substring of another's can no
+        longer invalidate the bystander's entries."""
         with self._lock:
             dropped = 0
             for store in (self._device, self._host):
                 for key in [k for k in store
-                            if k.graph_id == exact
-                            or str(k.graph_id).startswith(prefix)]:
+                            if prefix_matches(k.graph_id, prefix, exact)]:
                     dropped += 1
                     self._account(store, -store.pop(key).nbytes)
                     if store is self._host and self.directory is not None:
                         self.directory.unpublish(key, self.worker_id)
             for gid in [g for g in self._pins
-                        if g == exact or str(g).startswith(prefix)]:
+                        if prefix_matches(g, prefix, exact)]:
                 del self._pins[gid]
+            return dropped
+
+    def invalidate_keys(self, keys) -> int:
+        """Drop exactly the given keys from both tiers (the delta-update
+        path: a graph update invalidates the touched segments' stale keys
+        and nothing else). Returns the number of entries dropped."""
+        with self._lock:
+            dropped = 0
+            for key in keys:
+                for store in (self._device, self._host):
+                    entry = store.pop(key, None)
+                    if entry is not None:
+                        dropped += 1
+                        self._account(store, -entry.nbytes)
+                        if store is self._host and self.directory is not None:
+                            self.directory.unpublish(key, self.worker_id)
             return dropped
 
     def clear(self) -> None:

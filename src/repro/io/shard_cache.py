@@ -37,6 +37,7 @@ from repro.io.segment_cache import (
     SegmentKey,
     TieredSegmentCache,
     demote_to_host,
+    prefix_matches,
     promote_to_device,
 )
 from repro.io.tiers import (
@@ -55,6 +56,11 @@ def shard_of(key: SegmentKey, n_shards: int) -> int:
     which is salted per interpreter for str fields), uniform enough to
     balance bricks across shards, and identical for replicated workers
     looking at the same key.
+
+    Hashes exactly the four identity fields — `SegmentKey.fingerprint` is
+    deliberately excluded, so a segment keeps its owner shard across edge
+    deltas (only its content identity changes) and pre-fingerprint goldens
+    keep their placement bit-exactly.
     """
     if n_shards <= 1:
         return 0
@@ -257,10 +263,18 @@ class ShardedSegmentCache:
         return sum(s.invalidate_prefix(prefix, exact=exact)
                    for s in self.shards)
 
+    def invalidate_keys(self, keys) -> int:
+        """Drop exactly the given keys (delta-update invalidation), each at
+        its owner shard, clearing any placement override too."""
+        dropped = 0
+        for key in keys:
+            dropped += self._owner(key).invalidate_keys([key])
+            self._locations.pop(key, None)
+        return dropped
+
     def _drop_locations(self, prefix: str, exact: Hashable = None) -> None:
         for key in [k for k in self._locations
-                    if k.graph_id == exact
-                    or str(k.graph_id).startswith(prefix)]:
+                    if prefix_matches(k.graph_id, prefix, exact)]:
             del self._locations[key]
 
     def clear(self) -> None:

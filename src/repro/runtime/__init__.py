@@ -2,9 +2,9 @@ from repro.runtime.supervisor import (
     Supervisor, SupervisorConfig, ElasticMesh, RunState,
 )
 from repro.runtime.engine import (
-    AdmissionError, BatchReport, EngineConfig, GroupStats, InferenceRequest,
-    InferenceResult, RejectedRequest, RequestLatency, ServingEngine,
-    SubmitReceipt, WarmStartReport,
+    AdmissionError, BatchReport, EngineConfig, GraphUpdateReport, GroupStats,
+    InferenceRequest, InferenceResult, RejectedRequest, RequestLatency,
+    ServingEngine, SubmitReceipt, WarmStartReport,
 )
 from repro.runtime.serving_loop import (
     Arrival, ContinuousServer, ServeEvent, ServeReport, StepReport,
@@ -14,8 +14,8 @@ from repro.runtime.serving_loop import (
 
 __all__ = [
     "Supervisor", "SupervisorConfig", "ElasticMesh", "RunState",
-    "AdmissionError", "BatchReport", "EngineConfig", "GroupStats",
-    "InferenceRequest", "InferenceResult", "RejectedRequest",
+    "AdmissionError", "BatchReport", "EngineConfig", "GraphUpdateReport",
+    "GroupStats", "InferenceRequest", "InferenceResult", "RejectedRequest",
     "RequestLatency", "ServingEngine", "SubmitReceipt", "WarmStartReport",
     "Arrival", "ContinuousServer", "ServeEvent", "ServeReport", "StepReport",
     "VirtualClock", "bursty_trace", "poisson_trace", "replay_continuous",

@@ -57,6 +57,7 @@ from repro.io.tiers import (
     TPU_V5E_SYSTEM,
 )
 from repro.sparse.formats import CSR, BlockELL
+from repro.sparse.updates import EdgeDelta, apply_edge_updates
 
 
 @dataclasses.dataclass
@@ -204,6 +205,21 @@ class RequestLatency:
     def error_s(self) -> float:
         """Calibration error: group-relative completion vs prediction."""
         return self.processing_s - self.predicted_s
+
+
+@dataclasses.dataclass
+class GraphUpdateReport:
+    """What one `update_graph` edge delta changed, end to end."""
+
+    graph: str
+    delta: EdgeDelta
+    plans_updated: int            # prepared plans migrated (direction×width)
+    segments_retiled: int         # bricks re-densified (touched rows only)
+    segments_reused: int          # bricks carried over verbatim
+    retiled_bytes: int            # wire bytes of the re-densified bricks
+    stale_keys: int               # segment keys made stale by the delta
+    cache_entries_dropped: int    # of those, entries actually evicted
+    wall_seconds: float = 0.0
 
 
 @dataclasses.dataclass
@@ -403,11 +419,55 @@ class ServingEngine:
         self._engines.pop(name, None)
         self._pass_costs = {k: v for k, v in self._pass_costs.items()
                             if k[0] != name}
-        if a is not None and self.cache is not None:
-            self.cache.invalidate_prefix(AiresSpGEMM.graph_cache_prefix(a))
+        if a is not None:
+            prefix = AiresSpGEMM.graph_cache_prefix(a)
+            if self.cache is not None:
+                self.cache.invalidate_prefix(prefix)
+            if self.directory is not None:
+                # Unpublish this worker's holdings: peers must not be
+                # routed a peer-promote for entries we no longer back.
+                self.directory.drop_prefix(prefix,
+                                           worker_id=self.config.worker_id)
         orphaned = [r for r in self._queue if r.graph == name]
         self._queue = [r for r in self._queue if r.graph != name]
         return orphaned
+
+    def update_graph(self, name: str, inserts=None,
+                     deletes=None) -> GraphUpdateReport:
+        """Apply an edge delta to a registered graph, in place of the
+        evict-and-reregister cycle: prepared plans migrate incrementally
+        (`AiresSpGEMM.apply_edge_update` re-tiles only touched row blocks),
+        and exactly the stale segment keys are invalidated — device, host,
+        sharded tiers, and every `CacheDirectory` holder, peers included.
+        Untouched bricks stay resident, so the next epoch re-uploads only
+        what the delta touched. Queued requests keep working: the node
+        count is unchanged and they resolve the graph by name at serve
+        time."""
+        a = self._graphs.get(name)
+        if a is None:
+            raise KeyError(f"graph {name!r} not registered")
+        t0 = time.perf_counter()
+        new, delta = apply_edge_updates(a, inserts=inserts, deletes=deletes)
+        stats = self._engines[name].apply_edge_update(a, new, delta)
+        self._graphs[name] = new
+        dropped = 0
+        if stats.stale_keys:
+            if self.cache is not None:
+                dropped = self.cache.invalidate_keys(stats.stale_keys)
+            if self.directory is not None:
+                for key in stats.stale_keys:
+                    self.directory.drop(key)
+        # Cost memos price segment count and nnz — both may have changed.
+        self._pass_costs = {k: v for k, v in self._pass_costs.items()
+                            if k[0] != name}
+        return GraphUpdateReport(
+            graph=name, delta=delta, plans_updated=stats.plans_updated,
+            segments_retiled=stats.segments_retiled,
+            segments_reused=stats.segments_reused,
+            retiled_bytes=stats.retiled_bytes,
+            stale_keys=len(stats.stale_keys),
+            cache_entries_dropped=dropped,
+            wall_seconds=time.perf_counter() - t0)
 
     @property
     def graphs(self) -> List[str]:
@@ -442,6 +502,7 @@ class ServingEngine:
                 "segment_id": key.segment_id,
                 "wire_format": key.wire_format,
                 "shape": list(key.shape),
+                "fingerprint": key.fingerprint,
                 "nbytes": int(nbytes),
                 "bm": ell.bm, "bk": ell.bk,
                 "n_rows": ell.n_rows, "n_cols": ell.n_cols,
@@ -469,8 +530,12 @@ class ServingEngine:
                 n_tiles=arrays["n_tiles"], bm=int(meta["bm"]),
                 bk=int(meta["bk"]), n_rows=int(meta["n_rows"]),
                 n_cols=int(meta["n_cols"]))
+            # `fingerprint` absent in pre-delta checkpoints: restore with ""
+            # — such keys simply miss (and re-stream) under the
+            # fingerprint-bearing keys current plans emit.
             key = SegmentKey(meta["graph_id"], meta["segment_id"],
-                             meta["wire_format"], tuple(meta["shape"]))
+                             meta["wire_format"], tuple(meta["shape"]),
+                             fingerprint=meta.get("fingerprint", ""))
             nbytes = int(meta["nbytes"])
             report.modeled_seconds += self.tms.transfer(
                 Path.STORAGE_HOST, MemoryTier.STORAGE, MemoryTier.HOST,

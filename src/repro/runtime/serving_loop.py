@@ -226,6 +226,21 @@ class ContinuousServer:
             self._rejected.extend(self.engine._rejected)
             self.engine._rejected.clear()
 
+    # ---- evolving graphs -------------------------------------------------
+
+    def update_graph(self, name: str, inserts=None, deletes=None):
+        """Apply an edge delta between steps WITHOUT draining the queue.
+
+        Delegates to `ServingEngine.update_graph`: prepared plans migrate
+        incrementally and only the touched segments' cache keys are
+        invalidated. Queued and mid-forming requests keep working — the
+        node count is unchanged and groups resolve the graph by name at
+        `serve_group` time, so requests admitted before the delta are
+        served against the updated graph from the next step on. Returns
+        the engine's `GraphUpdateReport`."""
+        return self.engine.update_graph(name, inserts=inserts,
+                                        deletes=deletes)
+
     # ---- group formation -------------------------------------------------
 
     def form_groups(self, queue: List[InferenceRequest], now: float

@@ -16,6 +16,13 @@ from repro.sparse.formats import (
     csr_to_csc,
     csr_transpose,
     csr_row_slice,
+    csr_fingerprint,
+    segment_fingerprint,
+    graph_cache_prefix,
+)
+from repro.sparse.updates import (
+    EdgeDelta,
+    apply_edge_updates,
 )
 from repro.sparse.blocking import (
     tile_csr_to_block_ell,
@@ -32,6 +39,8 @@ __all__ = [
     "CSR", "CSC", "COO", "BlockELL",
     "csr_from_dense", "csc_from_dense", "csr_to_dense", "csc_to_dense",
     "csr_to_csc", "csr_transpose", "csr_row_slice",
+    "csr_fingerprint", "segment_fingerprint", "graph_cache_prefix",
+    "EdgeDelta", "apply_edge_updates",
     "tile_csr_to_block_ell", "block_ell_to_dense", "round_up",
     "spgemm_csr_dense", "spgemm_csr_csc", "spmm_dense_ref",
 ]

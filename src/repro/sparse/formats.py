@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 import zlib
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -21,6 +21,22 @@ class CSR:
     indices: np.ndarray  # (nnz,) int — column ids
     data: np.ndarray     # (nnz,) value dtype
     shape: Tuple[int, int]
+    # Lineage token for evolving graphs: `apply_edge_updates` stamps the
+    # updated CSR with its ancestor's cache-namespace prefix so untouched
+    # segment-cache keys keep matching across edge deltas. None (static
+    # graphs) → `graph_cache_prefix` derives the content-addressed prefix.
+    graph_key: Optional[str] = None
+
+    def __post_init__(self):
+        # CSRs are immutable once constructed: every cache layer
+        # (csr_fingerprint's memo, AiresSpGEMM's prepared LRU, the segment
+        # cache) keys on content captured at first sight, so an in-place
+        # mutation would silently serve stale bricks. Freezing the arrays
+        # makes that path fail loudly; edge changes must go through
+        # `apply_edge_updates`, which returns a fresh CSR.
+        for arr in (self.indptr, self.indices, self.data):
+            if isinstance(arr, np.ndarray):
+                arr.setflags(write=False)
 
     @property
     def nnz(self) -> int:
@@ -138,9 +154,9 @@ def csr_fingerprint(a: CSR) -> str:
     deterministic for sharded-cache placement (`shard_of` CRCs the key).
     Values are part of the hash because cached BlockELL bricks embed them:
     a re-weighted graph with identical sparsity must never hit the old
-    graph's bricks. Memoized on the instance; CSRs are contractually
-    immutable once cached (mutating one after the first call would serve a
-    stale fingerprint).
+    graph's bricks. Memoized on the instance; safe because CSR freezes its
+    arrays at construction (``__post_init__``), so the memo cannot go stale
+    — in-place mutation raises instead of silently serving old bricks.
     """
     memo = getattr(a, "_fingerprint", None)
     if memo is not None:
@@ -151,6 +167,42 @@ def csr_fingerprint(a: CSR) -> str:
     fp = f"{a.shape[0]}x{a.shape[1]}n{a.nnz}c{crc:08x}"
     a._fingerprint = fp
     return fp
+
+
+def segment_fingerprint(a: CSR, row_start: int, row_end: int) -> str:
+    """Content fingerprint of rows [row_start, row_end) of `a`.
+
+    Position-independent: the row pointers are hashed *relative* to the
+    segment start, so the same row content at a different nnz offset (rows
+    shifted by an edit elsewhere in the graph) fingerprints identically.
+    This is what lets `SegmentKey.fingerprint` keep untouched bricks valid
+    across edge deltas — a brick is stale exactly when the rows it encodes
+    changed, not when anything anywhere in the CSR changed.
+    """
+    lo = int(a.indptr[row_start])
+    hi = int(a.indptr[row_end])
+    rel = np.ascontiguousarray(a.indptr[row_start:row_end + 1] - lo)
+    crc = zlib.crc32(rel.tobytes())
+    crc = zlib.crc32(np.ascontiguousarray(a.indices[lo:hi]).tobytes(), crc)
+    crc = zlib.crc32(np.ascontiguousarray(a.data[lo:hi]).tobytes(), crc)
+    return f"s{row_end - row_start}n{hi - lo}c{crc:08x}"
+
+
+def graph_cache_prefix(a: CSR) -> str:
+    """Identity prefix shared by every segment-cache namespace derived for
+    `a` (any direction, plan width, or budget).
+
+    Static graphs (graph_key=None) get the content-addressed form
+    ``g{fingerprint}:{nnz}:{rows}x{cols}`` — stable across processes, so
+    checkpointed bricks warm-start a fresh serving process. Updated graphs
+    carry their ancestor's prefix in `graph_key` (stamped by
+    `apply_edge_updates`): the prefix then names the *lineage*, and
+    per-segment content identity moves into `SegmentKey.fingerprint`, so
+    untouched bricks keep hitting after an edge delta.
+    """
+    if a.graph_key:
+        return a.graph_key
+    return f"g{csr_fingerprint(a)}:{a.nnz}:{a.shape[0]}x{a.shape[1]}"
 
 
 def csr_from_dense(dense: np.ndarray) -> CSR:

@@ -369,6 +369,60 @@ def test_sharded_two_worker_warm_epoch_acceptance(quickstart_graph):
     assert stats.remote_hits > 0 and stats.ici_bytes > 0
 
 
+def test_evict_graph_unpublishes_directory_holdings(quickstart_graph):
+    """Regression (ISSUE 7 satellite): `evict_graph` dropped the local
+    cache but left the evicting worker's CacheDirectory records behind —
+    peers could be routed a peer-promote for host copies the worker no
+    longer backs. Eviction now drops exactly that worker's holdings under
+    the graph prefix; a peer's own records survive."""
+    from repro.core import AiresSpGEMM
+    from repro.io import prefix_matches
+
+    rng = np.random.default_rng(13)
+    a = quickstart_graph
+    h = rng.standard_normal((a.n_rows, 32)).astype(np.float32)
+    wire_total = _wire_total(a, h)
+
+    directory = CacheDirectory()
+    workers = [
+        ServingEngine(
+            EngineConfig(device_budget_bytes=_budget(a),
+                         cache_device_bytes=max(4, wire_total // 2),
+                         cache_shards=4, worker_id=wid),
+            directory=directory)
+        for wid in (0, 1)
+    ]
+    for eng in workers:
+        eng.register_graph("lj", a)
+        eng.submit(InferenceRequest("lj", h))
+        eng.run_batch()
+
+    prefix = AiresSpGEMM.graph_cache_prefix(a)
+    held_by_0 = [k for k in directory._entries
+                 if prefix_matches(k.graph_id, prefix)
+                 and directory.holder(k) == 0]
+    assert held_by_0, "demotion pressure must have published host copies"
+
+    workers[0].evict_graph("lj")
+    for key in held_by_0:
+        assert directory.holder(key) is None, (
+            "evicting worker's directory records must be unpublished")
+    leftovers = [k for k in directory._entries
+                 if prefix_matches(k.graph_id, prefix)]
+    assert all(directory.holder(k) == 1 for k in leftovers), (
+        "only the peer's own holdings may survive worker 0's evict")
+    # Worker 1 keeps serving correctly: the bricks it deduplicated against
+    # worker 0's now-gone host copies re-upload (no dangling peer-promote),
+    # and the answer is still exact.
+    workers[1].submit(InferenceRequest("lj", h))
+    rep = workers[1].run_batch()
+    assert rep.directory_hit_bytes == 0, (
+        "no peer-promote may be served from the evicted worker's records")
+    np.testing.assert_allclose(rep.results[0].output,
+                               _reference_chain(a, h, []), atol=1e-3,
+                               rtol=1e-3)
+
+
 def test_one_shard_directory_off_matches_pr2_bitexactly(quickstart_graph):
     """A 1-shard ShardedSegmentCache with no directory must reproduce the
     PR-2 TieredSegmentCache BatchReport byte accounting bit-exactly —

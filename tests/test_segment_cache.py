@@ -99,6 +99,107 @@ def test_invalidate_graph_drops_both_tiers():
     assert cache.tier_of(_key(2, "gB")) is not None
 
 
+def test_invalidate_prefix_is_delimiter_aware():
+    """Regression (ISSUE 7 satellite): raw-string prefix matching let
+    invalidating `g12` take out an innocent `g123` bystander. Matching is
+    now `:`-boundary aware — only the graph itself and its namespace
+    extensions fall."""
+    cache = TieredSegmentCache(device_budget_bytes=8)
+    cache.put(_key(0, "g12"), "a", 1)
+    cache.put(_key(1, "g12:fwd:w64"), "b", 1)
+    cache.put(_key(2, "g123"), "c", 1)
+    cache.put(_key(3, "g123:fwd:w64"), "d", 1)
+    assert cache.invalidate_prefix("g12") == 2
+    assert cache.tier_of(_key(0, "g12")) is None
+    assert cache.tier_of(_key(1, "g12:fwd:w64")) is None
+    assert cache.tier_of(_key(2, "g123")) is not None, \
+        "sibling graph sharing leading characters must survive"
+    assert cache.tier_of(_key(3, "g123:fwd:w64")) is not None
+
+
+def test_prefix_matches_semantics():
+    from repro.io import prefix_matches
+
+    assert prefix_matches("g12", "g12")
+    assert prefix_matches("g12:fwd:w64", "g12")
+    assert not prefix_matches("g123", "g12")
+    assert not prefix_matches("g123:fwd", "g12")
+    assert not prefix_matches("g1", "g12")
+    assert prefix_matches(1234, "x", exact=1234)   # non-string graph ids
+    assert not prefix_matches(1234, "12")
+
+
+def test_invalidate_keys_drops_exact_keys_both_tiers():
+    """The delta-update path: exactly the stale keys fall, nothing else —
+    including a host-tier (demoted) entry."""
+    cache = TieredSegmentCache(device_budget_bytes=2)
+    cache.put(_key(0), "a", 1)
+    cache.put(_key(1), "b", 1)
+    cache.put(_key(2), "c", 1)              # k0 demoted to host
+    assert cache.tier_of(_key(0)) == MemoryTier.HOST
+    assert cache.invalidate_keys([_key(0), _key(2), _key(9)]) == 2
+    assert cache.tier_of(_key(0)) is None
+    assert cache.tier_of(_key(2)) is None
+    assert cache.tier_of(_key(1)) == MemoryTier.DEVICE
+
+
+def test_invalidate_keys_unpublishes_directory_holdings():
+    from repro.io import CacheDirectory
+
+    directory = CacheDirectory()
+    directory.claim_worker("w0")
+    cache = TieredSegmentCache(device_budget_bytes=1, directory=directory,
+                               worker_id="w0")
+    cache.put(_key(0), "a", 1)
+    cache.put(_key(1), "b", 1)              # k0 demoted → published
+    assert directory.holder(_key(0)) == "w0"
+    cache.invalidate_keys([_key(0)])
+    assert directory.holder(_key(0)) is None
+
+
+def test_directory_drop_reaches_any_holder():
+    """`drop` removes a record regardless of holder (unlike the
+    holder-checked `unpublish`) — a graph delta makes peers' copies stale
+    too."""
+    from repro.io import CacheDirectory
+
+    directory = CacheDirectory()
+    directory.publish(_key(0), "peer", "v", 4)
+    directory.unpublish(_key(0), "me")      # holder-checked: no-op
+    assert directory.holder(_key(0)) == "peer"
+    assert directory.drop(_key(0)) is True
+    assert directory.holder(_key(0)) is None
+    assert directory.drop(_key(0)) is False
+
+
+def test_directory_drop_prefix_delimiter_aware_and_holder_filtered():
+    from repro.io import CacheDirectory
+
+    directory = CacheDirectory()
+    directory.publish(_key(0, "g12:fwd"), "w0", "a", 1)
+    directory.publish(_key(1, "g12:bwd"), "w1", "b", 1)
+    directory.publish(_key(2, "g123:fwd"), "w0", "c", 1)
+    assert directory.drop_prefix("g12", worker_id="w0") == 1
+    assert directory.holder(_key(1, "g12:bwd")) == "w1"
+    assert directory.holder(_key(2, "g123:fwd")) == "w0"
+    assert directory.drop_prefix("g12") == 1    # any holder
+    assert len(directory) == 1
+
+
+def test_fingerprint_distinguishes_segment_generations():
+    """Same (graph, segment, format, shape) but different content
+    fingerprints are different cache keys — the stale generation cannot
+    shadow the fresh one."""
+    cache = TieredSegmentCache(device_budget_bytes=4)
+    stale = SegmentKey("g0", 0, "bricks", (1, 8, 8), fingerprint="s8n4caaaa")
+    fresh = SegmentKey("g0", 0, "bricks", (1, 8, 8), fingerprint="s8n5cbbbb")
+    cache.put(stale, "old", 1)
+    assert cache.get(fresh, nbytes=1) is None
+    cache.put(fresh, "new", 1)
+    assert cache.get(fresh, nbytes=1) == "new"
+    assert cache.get(stale, nbytes=1) == "old"
+
+
 # ---- the properties (plain functions — both drivers call these) ----------
 
 def check_capacity_and_accounting(seed):
