@@ -1,0 +1,119 @@
+"""Lint every benchmark-built pipeline plan with the static analyzer.
+
+CI gate (the `lint` job): builds all 20 fig6 configurations (5 datasets ×
+4 schedulers, paper budgets at AIRES_BENCH_SCALE) plus the cached and
+sharded engine stream plans, runs `repro.core.analysis.analyze_plan` over
+each raw plan, and re-analyzes under `PassPipeline(strict=True)` with the
+three production passes — so a pass or builder change that oversubscribes
+a tier, drops bytes, or leaves a hazard fails CI before any golden drifts.
+
+Exit status: nonzero if any plan yields an error-severity finding.
+Warnings are printed but do not fail the gate.
+
+Usage:  PYTHONPATH=src python scripts/lint_plans.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)   # benchmarks.* lives at the repo root
+
+from benchmarks.common import (           # noqa: E402
+    SCALE, budget_for, dataset, feature_spec,
+)
+from repro.core import (                  # noqa: E402
+    AiresConfig,
+    AiresSpGEMM,
+    EDFOrderingPass,
+    PassPipeline,
+    PlanAnalysisError,
+    SCHEDULERS,
+    ShardPlacementPass,
+    TransferCoalescingPass,
+    analyze_plan,
+    plan_memory_dense_features,
+)
+from repro.io import (                    # noqa: E402
+    ShardedSegmentCache, TieredSegmentCache,
+)
+from repro.io.tiers import PAPER_GPU_SYSTEM  # noqa: E402
+
+DATASETS = ["rUSA", "kV2a", "kU1a", "socLJ1", "kP1a"]   # fig6 configs
+SPEC = PAPER_GPU_SYSTEM
+
+
+def _lint(label, plan, cache=None):
+    """Analyze one plan; returns its findings (printed as we go)."""
+    report = analyze_plan(plan, spec=SPEC, segment_cache=cache)
+    status = "clean" if not report.findings else (
+        f"{len(report.errors)} error(s), {len(report.warnings)} warning(s)")
+    print(f"  {label:<44s} {status}")
+    for f in report.findings:
+        print(f"    {f}")
+    return report
+
+
+def _strict_rewrite(label, plan, cache):
+    """Run the production passes under strict mode; analyzer findings on
+    any pass output raise (and fail the gate) right here."""
+    pipeline = PassPipeline(
+        [ShardPlacementPass(), TransferCoalescingPass(min_bytes=1 << 12),
+         EDFOrderingPass()],
+        spec=SPEC, strict=True)
+    try:
+        out, reports = pipeline.apply(plan, segment_cache=cache)
+    except PlanAnalysisError as err:
+        print(f"  {label:<44s} FAILED strict rewrite")
+        print(f"    {err}")
+        return False
+    n = sum(len(r.findings) for r in reports)
+    print(f"  {label:<44s} strict rewrite clean "
+          f"({len(reports)} passes, {n} findings)")
+    return n == 0
+
+
+def main() -> int:
+    errors = 0
+    print(f"fig6 builder plans (scale={SCALE:g}):")
+    for name in DATASETS:
+        a = dataset(name)
+        feat = feature_spec(a)
+        budget = budget_for(name, a, feat)
+        for sched_name, cls in SCHEDULERS.items():
+            plan = cls(SPEC, device_budget=budget).build_plan(
+                a, feat, dataset=name)
+            report = _lint(f"{name}/{sched_name}"
+                           + (" (oom)" if plan.oom else ""), plan)
+            errors += len(report.errors)
+
+    print("cached + sharded engine plans:")
+    small = dataset(DATASETS[0])
+    # The engine needs a feasible (M_B + M_C + working-set) budget at the
+    # serving width — the fig6 paper ratios deliberately starve it.
+    est = plan_memory_dense_features(small, small.n_rows, 16, float("inf"))
+    budget = int(est.m_b + est.m_c + 0.6 * small.nbytes())
+    for label, cache in (
+            ("tiered cache", TieredSegmentCache(device_budget_bytes=budget)),
+            ("sharded cache (4)", ShardedSegmentCache(
+                device_budget_bytes=budget, n_shards=4))):
+        eng = AiresSpGEMM(
+            AiresConfig(device_budget_bytes=budget, bm=8, bk=8),
+            segment_cache=cache)
+        plan = eng.stream_plan(small, (small.n_rows, 16), spec=SPEC)
+        report = _lint(f"stream plan / {label}", plan, cache=cache)
+        errors += len(report.errors)
+        if not _strict_rewrite(f"strict passes / {label}", plan, cache):
+            errors += 1
+
+    if errors:
+        print(f"FAIL: {errors} error-severity finding(s)")
+        return 1
+    print("OK: every plan analyzed clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

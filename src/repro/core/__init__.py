@@ -3,9 +3,19 @@
   memory_model : Eq. (5)-(7) analytical planning
   robw         : Algorithm 1 row block-wise alignment (+ RoBW-128)
   pipeline     : typed pipeline-plan IR + cost/execute interpreters
+  analysis     : static plan analyzer (liveness, races, byte lints)
   scheduler    : Algorithm 2 plan builders (AIRES + baselines)
   spgemm       : AiresSpGEMM public API + chained GCN epoch runner
 """
+from repro.core.analysis import (
+    AnalysisReport,
+    Finding,
+    PlanAnalysisError,
+    RULES,
+    analyze_plan,
+    diff_path_totals,
+    path_byte_totals,
+)
 from repro.core.memory_model import (
     FeatureSpec,
     MemoryEstimate,
@@ -71,6 +81,8 @@ from repro.core.spgemm import (
 )
 
 __all__ = [
+    "AnalysisReport", "Finding", "PlanAnalysisError", "RULES",
+    "analyze_plan", "diff_path_totals", "path_byte_totals",
     "FeatureSpec", "MemoryEstimate", "calc_mem", "ell_bucket_capacity",
     "estimate_output_bytes", "estimate_resident_bytes", "plan_memory",
     "plan_memory_dense_features", "plan_memory_spec", "plan_memory_unified",

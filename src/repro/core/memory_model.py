@@ -15,7 +15,7 @@ import dataclasses
 import math
 from typing import Optional
 
-from repro.sparse.formats import CSR, CSC
+from repro.sparse.formats import CSR
 
 
 @dataclasses.dataclass(frozen=True)

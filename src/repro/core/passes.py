@@ -49,6 +49,13 @@ import dataclasses
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.core.analysis import (
+    SEVERITY_ERROR,
+    Finding,
+    analyze_plan,
+    diff_path_totals,
+    path_byte_totals,
+)
 from repro.core.pipeline import (
     CacheProbeOp,
     PipelinePlan,
@@ -83,6 +90,11 @@ class PlanPass:
     engine). The base class is the identity on both."""
 
     name = "identity"
+    # Passes re-arrange the same bytes; `PassPipeline(strict=True)`
+    # enforces it via `analysis.path_byte_totals` after every rewrite.
+    # A future pass that legitimately changes traffic (layer fusion
+    # dropping a round trip, say) opts out by setting this False.
+    conserves_bytes = True
 
     def __call__(self, plan: PipelinePlan,
                  ctx: Optional[PassContext] = None) -> PipelinePlan:
@@ -95,11 +107,18 @@ class PlanPass:
 @dataclasses.dataclass
 class PassReport:
     """Before/after cost reading of one pass (both via
-    `PipelinePlan.estimate()` under the pipeline's TierSpec)."""
+    `PipelinePlan.estimate()` under the pipeline's TierSpec).
+
+    Under `PassPipeline(strict=True)`, `findings` carries the static
+    analyzer's verdict on the pass's output (repro.core.analysis) —
+    empty means the rewrite analyzed clean."""
 
     pass_name: str
-    before: ScheduleMetrics
-    after: ScheduleMetrics
+    # None when the pipeline runs strict-only (no TierSpec to estimate
+    # under); the cost-delta properties assume a tracked run.
+    before: Optional[ScheduleMetrics]
+    after: Optional[ScheduleMetrics]
+    findings: Tuple[Any, ...] = ()
 
     @property
     def makespan_delta_s(self) -> float:
@@ -126,10 +145,18 @@ class PassPipeline:
 
     def __init__(self, passes: Sequence[PlanPass] = (),
                  spec: Optional[TierSpec] = None,
-                 track_costs: bool = True):
+                 track_costs: bool = True, strict: bool = False):
         self.passes: List[PlanPass] = list(passes)
         self.spec = spec
         self.track_costs = track_costs
+        # strict: statically analyze the plan after every pass
+        # (repro.core.analysis), attach the findings to the PassReports,
+        # enforce per-path byte conservation for every pass that does not
+        # declare `conserves_bytes = False`, and raise PlanAnalysisError
+        # on any error-severity finding — so a byte-dropping or
+        # hazard-introducing rewrite dies at the pass boundary instead of
+        # surfacing as wrong interpreter output.
+        self.strict = strict
         self.last_reports: List[PassReport] = []
 
     def __len__(self) -> int:
@@ -162,13 +189,34 @@ class PassPipeline:
         track = self.track_costs and spec is not None
         reports: List[PassReport] = []
         before = plan.estimate(spec, segment_cache) if track else None
+        totals = path_byte_totals(plan) if self.strict else None
         for p in self.passes:
             plan = p(plan, ctx)
             plan.validate()
-            if track:
-                after = plan.estimate(spec, segment_cache)
-                reports.append(PassReport(p.name, before, after))
+            findings: Tuple[Any, ...] = ()
+            verdict = None
+            if self.strict:
+                verdict = analyze_plan(plan, spec=spec,
+                                       segment_cache=segment_cache)
+                after_totals = path_byte_totals(plan)
+                delta = diff_path_totals(totals, after_totals)
+                if delta and getattr(p, "conserves_bytes", True):
+                    verdict.findings.append(Finding(
+                        "bytes/path-delta", SEVERITY_ERROR,
+                        f"pass {p.name!r} changed per-path byte totals "
+                        f"by {delta} (set conserves_bytes=False if the "
+                        "pass legitimately re-routes traffic)"))
+                totals = after_totals
+                findings = tuple(verdict.findings)
+            if track or self.strict:
+                after = plan.estimate(spec, segment_cache) if track \
+                    else None
+                reports.append(PassReport(p.name, before, after,
+                                          findings=findings))
                 before = after
+            if verdict is not None:
+                self.last_reports = reports
+                verdict.raise_for_errors()
         self.last_reports = reports
         return plan, reports
 

@@ -276,9 +276,18 @@ class PipelinePlan:
             raise PlanValidationError(
                 f"duplicate phase declarations: {names}")
         declared = set(names)
+        if self.ops and not declared:
+            # An op-bearing plan with no declared phases used to slip
+            # through (the per-op check was guarded on `declared` being
+            # non-empty) — and then every op landed in an undeclared
+            # phase whose span never entered the makespan.
+            raise PlanValidationError(
+                f"plan {self.scheduler!r} carries {len(self.ops)} ops but "
+                "declares no phases: every op would sit in an undeclared "
+                "phase and its span would never enter the makespan")
         n = len(self.ops)
         for idx, bound in enumerate(self.ops):
-            if declared and bound.phase not in declared:
+            if bound.phase not in declared:
                 raise PlanValidationError(
                     f"op {idx} ({type(bound.op).__name__}) sits in "
                     f"undeclared phase {bound.phase!r} "
@@ -354,7 +363,7 @@ class PipelinePlan:
         calls this on live shared caches for admission control.
         """
         interp = CostInterpreter(spec, segment_cache=segment_cache,
-                                 peek_only=True)
+                                 peek_only=True, analyze=False)
         metrics, _ = interp.run(self)
         return metrics
 
@@ -369,10 +378,27 @@ class CostInterpreter:
     execute = False
 
     def __init__(self, spec: TierSpec, segment_cache: Any = None,
-                 peek_only: bool = False):
+                 peek_only: bool = False, analyze: Optional[bool] = None):
         self.spec = spec
         self.segment_cache = segment_cache
         self.peek_only = peek_only
+        # Static analysis before interpreting (repro.core.analysis):
+        # None defers to the module default — off in production, on for
+        # the whole suite via tests/conftest.py. `estimate()` always
+        # passes False: admission control prices plans constantly and
+        # analysis there would only re-check an already-checked plan.
+        self.analyze = analyze
+
+    def _analyze_enabled(self) -> bool:
+        if self.analyze is not None:
+            return self.analyze
+        from repro.core.analysis import default_analyze
+        return default_analyze()
+
+    def _analyze(self, plan: "PipelinePlan") -> None:
+        from repro.core.analysis import analyze_plan
+        analyze_plan(plan, spec=self.spec,
+                     segment_cache=self.segment_cache).raise_for_errors()
 
     def run(self, plan: PipelinePlan,
             tms: Optional[TieredMemorySystem] = None
@@ -384,6 +410,8 @@ class CostInterpreter:
             m.oom = True
             return m, None
         plan.validate()
+        if self._analyze_enabled():
+            self._analyze(plan)
         out = (np.zeros(plan.out_shape, dtype=plan.out_dtype)
                if self.execute and plan.out_shape is not None else None)
 
@@ -531,10 +559,11 @@ class ExecuteInterpreter(CostInterpreter):
     execute = True
 
     def __init__(self, spec: Optional[TierSpec] = None,
-                 segment_cache: Any = None, peek_only: bool = False):
+                 segment_cache: Any = None, peek_only: bool = False,
+                 analyze: Optional[bool] = None):
         # `spec` is only needed by run(); stream() is pure execution.
         super().__init__(spec, segment_cache=segment_cache,
-                         peek_only=peek_only)
+                         peek_only=peek_only, analyze=analyze)
 
     def stream(self, plan: PipelinePlan,
                upload: Callable[[Any], Any],
@@ -549,6 +578,13 @@ class ExecuteInterpreter(CostInterpreter):
         cost interpreter charges, so the two accountings cannot drift.
         """
         from repro.io.streamer import DoubleBufferedStreamer
+
+        if self._analyze_enabled():
+            # run() validates before interpreting; stream() is the real
+            # engine path and deserves the same gate when analysis is on
+            # (spec may be None here — the budget rules then skip).
+            plan.validate()
+            self._analyze(plan)
 
         payloads: List[Any] = []
         meta: Dict[Any, Tuple[Any, int, Optional[int]]] = {}

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Literal, Optional, Tuple, Union
+from typing import Callable, Dict, List, Literal, Optional, Union
 
 import numpy as np
 import jax
@@ -44,7 +44,6 @@ from repro.core.robw import (
     segments_to_block_ell,
 )
 from repro.core.scheduler import (
-    AiresScheduler,
     SCHEDULERS,
 )
 from repro.io.segment_cache import SegmentKey, TieredSegmentCache
@@ -137,7 +136,7 @@ class AiresSpGEMM:
 
     def __init__(self, config: AiresConfig,
                  segment_cache: Optional[SegmentCacheLike] = None,
-                 plan_passes=None):
+                 plan_passes=None, analyze: Optional[bool] = None):
         self.config = config
         # Optional tiered LRU over uploaded BlockELL payloads (shared across
         # engines by the serving layer): repeat streams of the same plan skip
@@ -147,6 +146,10 @@ class AiresSpGEMM:
         # plan before it is estimated or executed (build → rewrite →
         # interpret, same seam as the schedulers). None = identity.
         self.plan_passes = plan_passes
+        # Static plan analysis before every real stream (repro.core
+        # .analysis): None defers to the module default (tests flip it
+        # on); the serving engine forwards EngineConfig.analyze_plans.
+        self.analyze = analyze
         self._prepared: Dict[tuple, _Prepared] = {}
         self._transposes: Dict[tuple, CSR] = {}
         self.forward_stats_log: List[StreamStats] = []
@@ -453,7 +456,8 @@ class AiresSpGEMM:
         # Copy, not alias: TieredSegmentCache.stats mutates in place.
         before = (dataclasses.replace(cache.stats)
                   if cache is not None else None)
-        interp = ExecuteInterpreter(segment_cache=cache)
+        interp = ExecuteInterpreter(segment_cache=cache,
+                                    analyze=self.analyze)
         parts, stats = interp.stream(
             plan, upload, consume, depth=cfg.stream_depth,
             deadline_s=cfg.straggler_deadline_s)

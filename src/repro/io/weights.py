@@ -20,7 +20,6 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
-from repro.core.memory_model import ell_bucket_capacity
 from repro.io.streamer import DoubleBufferedStreamer
 
 

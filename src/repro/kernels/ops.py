@@ -6,7 +6,6 @@ on TPU.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -82,7 +81,6 @@ def fused_gcn_layer(
     materializing X in HBM."""
     if interpret is None:
         interpret = _on_cpu()
-    f = h.shape[1]
     h_pad = _pad_to(jnp.asarray(h), 0, ell.bk)
     need_k = int(np.max(ell.col_tile, initial=0) + 1) * ell.bk
     if h_pad.shape[0] < need_k:

@@ -41,7 +41,6 @@ from repro.launch.sharding import (
     batch_pspec, opt_state_pspecs, state_pspecs, tree_pspecs,
 )
 from repro.launch.specs import input_specs
-from repro.models.config import ArchConfig
 from repro.models.stacked import (
     _unit_apply, forward_scan, group_split, init_decode_state_stacked,
     init_params_stacked, lm_loss_scan, decode_step_scan, unit_kinds,
@@ -162,7 +161,6 @@ def _body_cost(cfg, mesh, mesh_axes, shape, kind: str, abs_params,
             from repro.models.stacked import BlockKind  # noqa
             x_ = x
             new_states = []
-            import repro.models.stacked as S
             # reuse the scan body's per-layer application
             for j, k_ in enumerate(u_kinds):
                 x_, ns = _decode_apply_one(cfg, k_, unit[j], states[j], x_,
@@ -187,13 +185,11 @@ def _body_cost(cfg, mesh, mesh_axes, shape, kind: str, abs_params,
 def _decode_apply_one(cfg, kind, p, st, x, pos):
     """Single-layer decode application shared with decode_step_scan."""
     from repro.models.stacked import decode_step_scan  # circular-safe
-    import repro.models.stacked as S
     from repro.models import layers as L
     from repro.models import recurrent as R_
     from repro.models.config import BlockKind
     from repro.models.transformer import _decode_attn
 
-    b = x.shape[0]
     h = L.rms_norm(x, p["ln1"])
     if kind in (BlockKind.ATTN, BlockKind.MOE, BlockKind.LOCAL_ATTN):
         window = cfg.sliding_window if kind == BlockKind.LOCAL_ATTN else None

@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import (
-    init_params, forward, encode, init_decode_state, decode_step,
+    init_params, encode, init_decode_state, decode_step,
 )
 
 

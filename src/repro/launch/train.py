@@ -8,7 +8,6 @@ scheduler environment).
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -54,8 +53,8 @@ def main(argv=None) -> None:
     def batches():
         step = start_step
         while True:
-            t, l = pipe.batch_at(step)
-            yield {"tokens": jnp.asarray(t), "labels": jnp.asarray(l)}
+            t, lbl = pipe.batch_at(step)
+            yield {"tokens": jnp.asarray(t), "labels": jnp.asarray(lbl)}
             step += 1
 
     lc = TrainLoopConfig(optimizer=args.optimizer, lr=args.lr,

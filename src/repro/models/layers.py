@@ -7,7 +7,6 @@ Conventions:
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax

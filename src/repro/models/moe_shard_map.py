@@ -23,7 +23,6 @@ tensor-parallel-inside-expert path).
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Tuple
 
 import jax

@@ -15,8 +15,7 @@ dry-run composes totals as `module_cost + (R-1) × body_cost` using
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +23,7 @@ import jax.numpy as jnp
 from repro.models.config import ArchConfig, BlockKind
 from repro.models import layers as L
 from repro.models.transformer import (
-    _layer_apply, _build_positions, _shard, _init_layer, _dtype, encode,
+    _layer_apply, _build_positions, _shard, _init_layer, _dtype,
 )
 
 

@@ -107,6 +107,12 @@ class EngineConfig:
     # Inter-chip link topology for the sharded cache's ICI charges (ring
     # vs all-to-all); all-to-all reproduces the former flat-link costing.
     ici_topology: ICITopology = ICI_ALL_TO_ALL
+    # Static plan analysis (repro.core.analysis) before every real stream:
+    # True forces it on, False off, None (default) defers to the module
+    # default — off in production, on under tests via tests/conftest.py.
+    # An error-severity finding raises PlanAnalysisError instead of
+    # streaming a semantically broken plan.
+    analyze_plans: Optional[bool] = None
     # Clock used for submit stamps, deadline expiry and EDF remaining-time
     # math. None (default) = `time.monotonic`. The continuous serving loop
     # (`repro.runtime.serving_loop`) injects a `VirtualClock` here so trace
@@ -409,7 +415,8 @@ class ServingEngine:
                 plan_features=cfg.max_batch_features,
             ),
             segment_cache=self.cache,
-            plan_passes=self.plan_pipeline)
+            plan_passes=self.plan_pipeline,
+            analyze=cfg.analyze_plans)
 
     def evict_graph(self, name: str) -> List[InferenceRequest]:
         """Drop a graph, its engine, its cached segments (every namespace,

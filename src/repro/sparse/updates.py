@@ -16,7 +16,7 @@ keep their `segment_fingerprint` and their cached bricks stay valid.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 

@@ -13,7 +13,7 @@ Usage inside a train step:
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -7,8 +7,7 @@ O(rows+cols). The launcher picks per-arch (configs set stream_weights/size).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Dict, Tuple
+from typing import Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

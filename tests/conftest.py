@@ -27,6 +27,20 @@ def pytest_configure(config):
         "slow: long-running test (excluded from the PR-tier fast subset)")
 
 
+@pytest.fixture(autouse=True, scope="session")
+def _analyze_plans_by_default():
+    """Static plan analysis is on for the whole suite: every plan any test
+    interprets or streams is checked by `repro.core.analysis` first, and an
+    error-severity finding raises `PlanAnalysisError`. Production keeps the
+    default off; tests that deliberately interpret a broken plan opt out
+    with `analyze=False`."""
+    from repro.core import analysis
+
+    previous = analysis.set_default_analyze(True)
+    yield
+    analysis.set_default_analyze(previous)
+
+
 @pytest.fixture(scope="session")
 def make_sparse():
     """Factory for small random sparse matrices: (CSR, dense) pairs.

@@ -39,6 +39,7 @@ from repro.core import (
     edf_sort,
     plan_memory_dense_features,
 )
+from repro.core.analysis import diff_path_totals, path_byte_totals
 from repro.core.pipeline import LANE_COMPUTE, LANE_DMA
 from repro.io import (
     CacheDirectory,
@@ -112,6 +113,20 @@ def test_validate_rejects_cycles_and_forward_refs():
     q.add(ComputeOp(1e-6), "p", LANE_COMPUTE, deps=(0,))  # self-cycle
     with pytest.raises(PlanValidationError, match="cycle"):
         q.validate()
+
+
+def test_validate_rejects_op_bearing_plan_without_phases():
+    """The `if declared and ...` loophole is closed: an op-bearing plan
+    with an empty phase list used to pass validation, and every op then
+    sat in an undeclared phase whose span never entered the makespan."""
+    p = PipelinePlan(scheduler="t")
+    p.add(ComputeOp(1e-6), "p", LANE_COMPUTE)
+    with pytest.raises(PlanValidationError, match="declares no phases"):
+        p.validate()
+    # Empty plans stay valid — builders return one (oom=True) for
+    # infeasible budgets before declaring any phase.
+    PipelinePlan(scheduler="t").validate()
+    PipelinePlan(scheduler="t", oom=True).validate()
 
 
 def test_validate_rejects_undeclared_and_duplicate_phases():
@@ -247,10 +262,6 @@ def test_identity_pipeline_engine_reports_bitexact(golden, small_graph):
 # ---- transfer coalescing ---------------------------------------------------
 
 
-def _bytes_per_path(metrics):
-    return dict(metrics.bytes_by_path)
-
-
 def _random_plan(rng):
     """A random (valid) multi-lane, multi-phase plan of small transfers,
     computes and host ops — the coalescing property-test input."""
@@ -282,20 +293,25 @@ def _random_plan(rng):
 
 
 def _assert_coalescing_invariants(plan, min_bytes):
+    # strict=True: the shared analyzer enforces per-path byte conservation
+    # inside apply() — the same diff CI's scripts/lint_plans.py runs, so
+    # this test and the lint gate cannot drift.
     pipeline = PassPipeline([TransferCoalescingPass(min_bytes=min_bytes)],
-                            spec=PAPER_GPU_SYSTEM)
+                            spec=PAPER_GPU_SYSTEM, strict=True)
     before = plan.estimate(PAPER_GPU_SYSTEM)
     out, reports = pipeline.apply(plan)
     out.validate()
     after = out.estimate(PAPER_GPU_SYSTEM)
-    # bytes per path conserved exactly
-    assert _bytes_per_path(before) == _bytes_per_path(after)
+    # bytes per path conserved exactly (analyzer diff helper: {} = no delta)
+    assert diff_path_totals(path_byte_totals(plan),
+                            path_byte_totals(out)) == {}
     # fewer (or equal) transfer ops, never more setup latency
     n_before = sum(isinstance(b.op, TransferOp) for b in plan.ops)
     n_after = sum(isinstance(b.op, TransferOp) for b in out.ops)
     assert n_after <= n_before
     assert after.io_modeled_s <= before.io_modeled_s + 1e-15
     assert reports and reports[0].pass_name == "transfer-coalescing"
+    assert not any(f.severity == "error" for f in reports[0].findings)
 
 
 def test_coalescing_conserves_bytes_per_path_property():
@@ -362,7 +378,9 @@ def test_coalescing_remaps_compute_deps(small_graph):
         plan)
     out.validate()
     after = out.estimate(PAPER_GPU_SYSTEM)
-    assert _bytes_per_path(before) == _bytes_per_path(after)
+    assert after.bytes_by_path == before.bytes_by_path
+    assert diff_path_totals(path_byte_totals(plan),
+                            path_byte_totals(out)) == {}
     n_cmp = sum(isinstance(b.op, ComputeOp) for b in out.ops)
     assert n_cmp == plan.segments
 

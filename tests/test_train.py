@@ -71,10 +71,10 @@ def test_grad_accum_equivalence():
     cfg = get_config("yi_6b", smoke=True)
     params = init_params(cfg, jax.random.PRNGKey(0))
     pipe = TokenPipeline(cfg.vocab, 8, 4)
-    t, l = pipe.batch_at(0)
-    big = {"tokens": jnp.asarray(t), "labels": jnp.asarray(l)}
+    t, lbl = pipe.batch_at(0)
+    big = {"tokens": jnp.asarray(t), "labels": jnp.asarray(lbl)}
     micro = {"tokens": jnp.asarray(t).reshape(2, 2, 8),
-             "labels": jnp.asarray(l).reshape(2, 2, 8)}
+             "labels": jnp.asarray(lbl).reshape(2, 2, 8)}
 
     from repro.train.loop import make_train_step
     init_opt, _ = make_optimizer("adamw", lr=1e-3)
@@ -102,8 +102,8 @@ def test_train_loop_loss_decreases():
     def batches():
         s = 0
         while True:
-            t, l = pipe.batch_at(0)  # overfit one batch
-            yield {"tokens": jnp.asarray(t), "labels": jnp.asarray(l)}
+            t, lbl = pipe.batch_at(0)  # overfit one batch
+            yield {"tokens": jnp.asarray(t), "labels": jnp.asarray(lbl)}
             s += 1
 
     lc = TrainLoopConfig(max_steps=20, lr=2e-3)
