@@ -19,10 +19,14 @@ import os
 from typing import Dict, List, Optional
 
 from repro.configs import SHAPES, get_config
+from repro.io.tiers import Path, TPU_V5E_SYSTEM
 
-PEAK_FLOPS = 197e12      # bf16 per chip
-HBM_BW = 819e9           # bytes/s per chip
-ICI_BW = 50e9            # bytes/s per link
+# Per-chip peaks sourced from the one TierSpec the whole repo prices
+# against (repro.io.tiers.TPU_V5E_SYSTEM) — the same constants the
+# autotuner's roofline cross-check reads, so the two can never drift.
+PEAK_FLOPS = TPU_V5E_SYSTEM.peak_flops    # bf16 per chip
+HBM_BW = TPU_V5E_SYSTEM.hbm_bw            # bytes/s per chip
+ICI_BW = TPU_V5E_SYSTEM.bw[Path.ICI]      # bytes/s per link
 
 def _default_results_dir() -> str:
     if os.environ.get("DRYRUN_DIR"):

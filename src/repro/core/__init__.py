@@ -6,6 +6,8 @@
   analysis     : static plan analyzer (liveness, races, byte lints)
   scheduler    : Algorithm 2 plan builders (AIRES + baselines)
   spgemm       : AiresSpGEMM public API + chained GCN epoch runner
+  calibration  : online per-path bandwidth/latency fitting (cost loop)
+  autotune     : schedule knob search over the plan IR
 """
 from repro.core.analysis import (
     AnalysisReport,
@@ -56,6 +58,16 @@ from repro.core.passes import (
     deadline_order,
     edf_sort,
 )
+from repro.core.autotune import (
+    TunedSchedule,
+    autotune_schedule,
+    bucket_set_bytes,
+    candidate_bucket_sets,
+)
+from repro.core.calibration import (
+    CostCalibrator,
+    PathEstimate,
+)
 from repro.core.robw import (
     RoBWPlan,
     RoBWSegment,
@@ -65,6 +77,7 @@ from repro.core.robw import (
     robw_delta_partition,
     robw_partition,
     robw_transpose_plan,
+    segment_ell_widths,
     segments_to_block_ell,
 )
 from repro.core.scheduler import (
@@ -90,7 +103,10 @@ __all__ = [
     "segment_budget",
     "RoBWPlan", "RoBWSegment", "densify_segment", "merge_partial_rows",
     "naive_partition", "robw_delta_partition", "robw_partition",
-    "robw_transpose_plan", "segments_to_block_ell",
+    "robw_transpose_plan", "segment_ell_widths", "segments_to_block_ell",
+    "CostCalibrator", "PathEstimate",
+    "TunedSchedule", "autotune_schedule", "bucket_set_bytes",
+    "candidate_bucket_sets",
     "SCHEDULERS", "AiresScheduler", "ETCScheduler", "MaxMemoryScheduler",
     "ScheduleMetrics", "ScheduleResult", "UCGScheduler",
     "AllocOp", "CacheProbeOp", "ComputeOp", "CostInterpreter",

@@ -353,17 +353,35 @@ class TransferCoalescingPass(PlanPass):
     per-transfer latency count — and, for payload-bearing stream plans,
     the real streamer's issue count — drops. `CacheProbeOp`s are never
     merged: each brick must stay individually addressable in the cache.
+
+    ``min_bytes=None`` derives the threshold per path from the
+    (calibrated) spec in the `PassContext` as ``bw·latency`` — the byte
+    count at which setup cost equals streaming cost, which is exactly
+    where merging stops paying. With no spec in context it falls back to
+    the documented ``1<<18`` default.
     """
 
     name = "transfer-coalescing"
 
-    def __init__(self, min_bytes: int = 1 << 18):
-        if min_bytes <= 0:
+    DEFAULT_MIN_BYTES = 1 << 18
+
+    def __init__(self, min_bytes: Optional[int] = DEFAULT_MIN_BYTES):
+        if min_bytes is not None and min_bytes <= 0:
             raise ValueError("min_bytes must be > 0")
-        self.min_bytes = int(min_bytes)
+        self.min_bytes = int(min_bytes) if min_bytes is not None else None
+
+    def threshold(self, spec: Optional[TierSpec], path) -> int:
+        """Coalescing threshold for one path: the explicit `min_bytes`,
+        or the spec-derived ``bw·latency`` crossover when None."""
+        if self.min_bytes is not None:
+            return self.min_bytes
+        if spec is None or path not in spec.bw:
+            return self.DEFAULT_MIN_BYTES
+        return max(1, int(spec.bw[path] * spec.latency_s.get(path, 0.0)))
 
     def __call__(self, plan: PipelinePlan,
                  ctx: Optional[PassContext] = None) -> PipelinePlan:
+        spec = ctx.spec if ctx is not None else None
         overlap = {ph.name: ph.overlap for ph in plan.phases}
         groups: List[List[int]] = []     # member op indices, consecutive
         group_of: Dict[int, int] = {}
@@ -372,7 +390,8 @@ class TransferCoalescingPass(PlanPass):
         for idx, bound in enumerate(plan.ops):
             op = bound.op
             run_key = None
-            if isinstance(op, TransferOp) and op.nbytes < self.min_bytes:
+            if (isinstance(op, TransferOp)
+                    and op.nbytes < self.threshold(spec, op.path)):
                 run_key = (bound.phase, bound.lane, op.path, op.src, op.dst,
                            op.merge, op.payload is None)
             if run_key is None:

@@ -160,6 +160,7 @@ def densify_segment(
     bk: int = 128,
     dtype: np.dtype = np.float32,
     bucketed: bool = True,
+    buckets: Optional[List[int]] = None,
 ) -> BlockELL:
     """Tile-densify one RoBW segment of `a` into a BlockELL brick.
 
@@ -168,11 +169,15 @@ def densify_segment(
     apply_edge_update`): both produce bit-identical bricks for the same
     rows, which is what makes delta-updated bricks interchangeable with a
     from-scratch re-tile.
+
+    `buckets` is an explicit ELL bucket ladder (see `ell_bucket_capacity`
+    and the autotuner, `repro.core.autotune`); None keeps the default
+    power-of-two buckets bit-exactly.
     """
     sub = csr_row_slice(a, seg.row_start, seg.row_end)
     ell = tile_csr_to_block_ell(sub, bm=bm, bk=bk, ell_width=None, dtype=dtype)
     if bucketed:
-        cap = ell_bucket_capacity(ell.ell_width)
+        cap = ell_bucket_capacity(ell.ell_width, buckets)
         if cap != ell.ell_width:
             pad = cap - ell.ell_width
             ell.blocks = np.pad(ell.blocks, ((0, 0), (0, pad), (0, 0), (0, 0)))
@@ -188,15 +193,40 @@ def segments_to_block_ell(
     bk: int = 128,
     dtype: np.dtype = np.float32,
     bucketed: bool = True,
+    buckets: Optional[List[int]] = None,
 ) -> Iterator[BlockELL]:
     """Phase-I host preprocessing: stream of tile-densified segments.
 
     With bucketed=True, ell_width is padded to the power-of-two bucket so all
-    segments in the same bucket share a compiled kernel (DESIGN §2).
+    segments in the same bucket share a compiled kernel (DESIGN §2); an
+    explicit `buckets` ladder replaces the power-of-two one.
     """
     for seg in plan.segments:
         yield densify_segment(a, seg, bm=bm, bk=bk, dtype=dtype,
-                              bucketed=bucketed)
+                              bucketed=bucketed, buckets=buckets)
+
+
+def segment_ell_widths(a: CSR, plan: RoBWPlan, bm: int = 128,
+                       bk: int = 128) -> List[int]:
+    """True (pre-padding) BlockELL tile width of every segment in `plan`.
+
+    The width `tile_csr_to_block_ell(..., ell_width=None)` would compute
+    — max over the segment's row blocks of distinct populated column
+    tiles — read straight off the CSR index structure, with no
+    densification. This is what lets the autotuner price candidate ELL
+    bucket sets analytically (`repro.core.autotune.bucket_set_bytes`)
+    before committing to a re-tile.
+    """
+    widths: List[int] = []
+    for seg in plan.segments:
+        w = 0
+        for rb_start in range(seg.row_start, seg.row_end, bm):
+            lo = int(a.indptr[rb_start])
+            hi = int(a.indptr[min(rb_start + bm, seg.row_end)])
+            if hi > lo:
+                w = max(w, int(np.unique(a.indices[lo:hi] // bk).size))
+        widths.append(max(1, w))
+    return widths
 
 
 def robw_delta_partition(

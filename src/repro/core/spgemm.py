@@ -79,6 +79,10 @@ class AiresConfig:
     # hits across layers/epochs/requests instead of re-planning per shape.
     # Widths beyond plan_features still get their own (conservative) plan.
     plan_features: Optional[int] = None
+    # Explicit ELL bucket ladder for tile densification (see
+    # `ell_bucket_capacity` and the autotuner, repro.core.autotune).
+    # None (default) keeps the power-of-two buckets bit-exactly.
+    ell_buckets: Optional[List[int]] = None
 
 
 @dataclasses.dataclass
@@ -231,7 +235,8 @@ class AiresSpGEMM:
         # every width up to plan_features.
         plan_shape = (dense_shape[0],
                       max(cfg.plan_features or 0, dense_shape[1]))
-        key = (csr_fingerprint(a), a.nnz, a.shape, plan_shape, transpose)
+        key = (csr_fingerprint(a), a.nnz, a.shape, plan_shape, transpose,
+               tuple(cfg.ell_buckets or ()))
         hit = self._prepared.pop(key, None)
         if hit is not None:
             self._prepared[key] = hit  # re-insert: most-recently-used
@@ -255,13 +260,21 @@ class AiresSpGEMM:
         else:
             mem, plan = self.plan(a, plan_shape)
             stream_a = a
+        # Explicit bucket ladders tag the namespace: their bricks pad
+        # differently, so they must never collide with (or warm-start
+        # from) the default power-of-two entries. No buckets = the
+        # pre-autotune namespace, byte-for-byte.
+        bucket_tag = ("" if not cfg.ell_buckets else
+                      ":e" + "x".join(str(b) for b in cfg.ell_buckets))
         cache_ns = (f"{self.graph_cache_prefix(a)}"
                     f":{'bwd' if transpose else 'fwd'}"
-                    f":w{plan_shape[1]}:b{cfg.device_budget_bytes}")
+                    f":w{plan_shape[1]}:b{cfg.device_budget_bytes}"
+                    f"{bucket_tag}")
         prepared = _Prepared(
             a=stream_a, mem=mem, plan=plan, segs=list(plan.segments),
             ells=list(segments_to_block_ell(stream_a, plan,
-                                            bm=cfg.bm, bk=cfg.bk)),
+                                            bm=cfg.bm, bk=cfg.bk,
+                                            buckets=cfg.ell_buckets)),
             cache_ns=cache_ns,
             fps=[segment_fingerprint(stream_a, s.row_start, s.row_end)
                  for s in plan.segments])
@@ -306,7 +319,7 @@ class AiresSpGEMM:
         stats = UpdateStats()
         for key in [k for k in self._prepared if k[0] == old_fp]:
             prep = self._prepared.pop(key)
-            _, _, _, plan_shape, transpose = key
+            _, _, _, plan_shape, transpose, buckets = key
             if transpose:
                 stream_new = self.transpose_of(new)
                 touched = delta.touched_cols
@@ -324,7 +337,8 @@ class AiresSpGEMM:
                     stats.segments_reused += 1
                 else:
                     ell = densify_segment(stream_new, seg,
-                                          bm=cfg.bm, bk=cfg.bk)
+                                          bm=cfg.bm, bk=cfg.bk,
+                                          buckets=cfg.ell_buckets)
                     ells.append(ell)
                     fps.append(segment_fingerprint(
                         stream_new, seg.row_start, seg.row_end))
@@ -338,7 +352,7 @@ class AiresSpGEMM:
                                  segs=segs, ells=ells,
                                  cache_ns=prep.cache_ns, fps=fps)
             self._prepared[(csr_fingerprint(new), new.nnz, new.shape,
-                            plan_shape, transpose)] = new_prep
+                            plan_shape, transpose, buckets)] = new_prep
             if self.segment_cache is not None:
                 # Re-pin: the namespace now answers for the updated graph.
                 self.segment_cache.pin(prep.cache_ns, new)
@@ -401,18 +415,22 @@ class AiresSpGEMM:
         return plan
 
     def stream_plan(self, a: CSR, h_shape, spec: Optional[TierSpec] = None,
-                    transpose: bool = False) -> PipelinePlan:
+                    transpose: bool = False,
+                    apply_passes: bool = True) -> PipelinePlan:
         """Plan (and prepare) one streamed pass of `a` at `h_shape`.
 
         The configured `plan_passes` are applied, so estimates price the
-        plan the stream will actually run."""
+        plan the stream will actually run. ``apply_passes=False`` returns
+        the raw pre-rewrite plan — the autotuner's trial input (rewrite
+        passes mutate ops in place, so each candidate pipeline needs a
+        fresh build)."""
         h_shape = tuple(int(s) for s in h_shape)
         feat = FeatureSpec(h_shape[0], h_shape[1], 4, 0.0)
         prepared = self._prepare(a, h_shape, transpose)
         plan = self._build_stream_plan(prepared, feat=feat, spec=spec)
-        if self.plan_passes is not None:
+        if apply_passes and self.plan_passes is not None:
             plan, _ = self.plan_passes.apply(
-                plan, segment_cache=self.segment_cache)
+                plan, spec=spec, segment_cache=self.segment_cache)
         return plan
 
     def _stream(self, prepared: _Prepared, consume_one: Callable,

@@ -91,14 +91,19 @@ class TierSpec:
     hbm_bw: float = 1.0e12        # device memory bandwidth (SpGEMM is bound by it)
     host_memcpy_bw: float = 12e9  # effective single-stream DRAM copy bandwidth
     host_op_latency_s: float = 2e-6  # per host staging/merge event
+    # Peak device compute (FLOP/s): the roofline compute term. Single
+    # source of truth for benchmarks/roofline.py and the autotuner's
+    # roofline cross-check.
+    peak_flops: float = 0.0
 
 
-def _mk(caps, bw_gbs, lat_us, hbm_bw, host_bw=12e9) -> TierSpec:
+def _mk(caps, bw_gbs, lat_us, hbm_bw, host_bw=12e9,
+        peak_flops=0.0) -> TierSpec:
     return TierSpec(
         device_capacity=caps[0], host_capacity=caps[1], storage_capacity=caps[2],
         bw={p: g * 1e9 for p, g in bw_gbs.items()},
         latency_s={p: u * 1e-6 for p, u in lat_us.items()},
-        hbm_bw=hbm_bw, host_memcpy_bw=host_bw,
+        hbm_bw=hbm_bw, host_memcpy_bw=host_bw, peak_flops=peak_flops,
     )
 
 
@@ -111,7 +116,7 @@ PAPER_GPU_SYSTEM = _mk(
      Path.ICI: 100.0},
     {Path.DMA: 8.0, Path.GDS: 25.0, Path.STORAGE_HOST: 20.0, Path.UM: 4.0,
      Path.ICI: 2.0},
-    hbm_bw=1008e9,
+    hbm_bw=1008e9, peak_flops=82.6e12,
 )
 
 # TPU v5e chip: 16 GB HBM @ 819 GB/s; host over PCIe; ICI ~50 GB/s/link.
@@ -121,7 +126,7 @@ TPU_V5E_SYSTEM = _mk(
      Path.ICI: 50.0},
     {Path.DMA: 5.0, Path.GDS: 20.0, Path.STORAGE_HOST: 20.0, Path.UM: 4.0,
      Path.ICI: 1.0},
-    hbm_bw=819e9,
+    hbm_bw=819e9, peak_flops=197e12,
 )
 
 
@@ -130,9 +135,10 @@ class TransferRecord:
     path: Path
     src: MemoryTier
     dst: MemoryTier
-    nbytes: int
+    nbytes: int               # wire bytes: payload × hops
     seconds: float
     tag: str = ""
+    hops: int = 1             # links crossed (payload = nbytes // hops)
 
 
 class OutOfMemory(RuntimeError):
@@ -205,7 +211,7 @@ class TieredMemorySystem:
         wire = int(nbytes) * hops
         if self.keep_records:
             self.transfers.append(
-                TransferRecord(path, src, dst, wire, secs, tag))
+                TransferRecord(path, src, dst, wire, secs, tag, hops=hops))
         self.busy_s[path] += secs
         self._bytes_by_path[path] += wire
         self._seconds_by_path[path] += secs

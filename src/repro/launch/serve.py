@@ -52,7 +52,8 @@ def serve(cfg, params, prompts: np.ndarray, steps: int = 8):
 def serve_gcn(scale: float = 1e-4, batch: int = 4, epochs: int = 2,
               cache: bool = True, feature_dim: int = 16, seed: int = 0,
               cache_shards: int = 1, workers: int = 1,
-              passes: bool = False):
+              passes: bool = False, calibrate: bool = False,
+              autotune: bool = False, summary_out=None):
     """Drive the multi-graph GCN serving engine; returns per-epoch reports.
 
     `cache_shards > 1` partitions each worker's cache device tier across
@@ -65,6 +66,13 @@ def serve_gcn(scale: float = 1e-4, batch: int = 4, epochs: int = 2,
     `passes` routes every batch through the plan-rewrite pipeline
     (repro.core.passes): shard-aware brick placement, transfer coalescing
     and earliest-deadline-first batch ordering.
+
+    `calibrate` attaches a `CostCalibrator` to every worker: each batch's
+    `RequestLatency` stream refits the cost model, so later epochs price
+    against the calibrated spec. `autotune` runs the schedule autotuner
+    per graph after the first epoch and installs the winners. A caller
+    dict in `summary_out` receives per-epoch calibrated vs uncalibrated
+    mean |error| and the installed `TunedSchedule` descriptions.
     """
     from repro.data import (
         SUITESPARSE_SPECS, generate_graph, normalized_adjacency, scaled_spec,
@@ -73,8 +81,8 @@ def serve_gcn(scale: float = 1e-4, batch: int = 4, epochs: int = 2,
     from repro.runtime import EngineConfig, InferenceRequest, ServingEngine
 
     from repro.core import (
-        EDFOrderingPass, ShardPlacementPass, TransferCoalescingPass,
-        plan_memory_dense_features,
+        CostCalibrator, EDFOrderingPass, ShardPlacementPass,
+        TransferCoalescingPass, plan_memory_dense_features,
     )
 
     rng = np.random.default_rng(seed)
@@ -98,14 +106,28 @@ def serve_gcn(scale: float = 1e-4, batch: int = 4, epochs: int = 2,
         eng = ServingEngine(
             EngineConfig(device_budget_bytes=budget, cache_enabled=cache,
                          cache_shards=cache_shards, worker_id=wid,
-                         plan_passes=plan_passes),
+                         plan_passes=plan_passes,
+                         calibrator=CostCalibrator() if calibrate else None),
             directory=directory)
         for name, a in graphs.items():
             eng.register_graph(name, a)
         engines.append(eng)
 
+    # Fixed-spec baseline predictions for the calibration comparison: one
+    # template request per graph, priced against the *uncalibrated*
+    # tier_spec (spec= bypasses the calibrated memo).
+    uncal_cost = {}
+    if calibrate:
+        for name, a in graphs.items():
+            h0 = np.zeros((a.n_rows, feature_dim), np.float32)
+            w0 = [np.zeros((feature_dim, feature_dim), np.float32)]
+            uncal_cost[name] = engines[0].estimate_request_cost(
+                InferenceRequest(name, h0, w0),
+                spec=engines[0].config.tier_spec)
+
+    epoch_errors = []  # (calibrated mean |err|, uncalibrated mean |err|)
     reports = []
-    for _ in range(epochs):
+    for epoch in range(epochs):
         epoch_reports = []
         for eng in engines:
             for name, a in graphs.items():
@@ -116,7 +138,23 @@ def serve_gcn(scale: float = 1e-4, batch: int = 4, epochs: int = 2,
                         (feature_dim, feature_dim)).astype(np.float32)]
                     eng.submit(InferenceRequest(name, h, w))
             epoch_reports.append(eng.run_batch())
+        if calibrate:
+            lats = [l for r in epoch_reports for l in r.request_latency]
+            if lats:
+                epoch_errors.append((
+                    sum(abs(l.error_s) for l in lats) / len(lats),
+                    sum(abs(l.processing_s - uncal_cost[l.graph])
+                        for l in lats) / len(lats)))
+        if autotune and epoch == 0:
+            for eng in engines:
+                for name in graphs:
+                    eng.autotune(name, install=True)
         reports.append(epoch_reports[0] if workers == 1 else epoch_reports)
+    if summary_out is not None:
+        summary_out["epoch_errors"] = epoch_errors
+        summary_out["installed_schedules"] = {
+            name: tuned.describe()
+            for name, tuned in engines[0].installed_schedules.items()}
     return reports
 
 
@@ -200,6 +238,12 @@ def main(argv=None) -> None:
                     help="gcn mode: route batches through the plan-rewrite "
                          "pipeline (shard placement, transfer coalescing, "
                          "EDF batch ordering)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="gcn mode: fit the cost model online from each "
+                         "batch's latency stream and reprice against it")
+    ap.add_argument("--autotune", action="store_true",
+                    help="gcn mode: autotune + install the plan schedule "
+                         "per graph after the first epoch")
     ap.add_argument("--trace", choices=("poisson", "bursty"),
                     default="poisson",
                     help="continuous mode: arrival process to replay")
@@ -224,10 +268,13 @@ def main(argv=None) -> None:
         return
 
     if args.mode == "gcn":
+        summary = {}
         reports = serve_gcn(batch=args.batch, epochs=args.epochs,
                             cache=not args.no_cache,
                             cache_shards=args.cache_shards,
-                            workers=args.workers, passes=args.passes)
+                            workers=args.workers, passes=args.passes,
+                            calibrate=args.calibrate,
+                            autotune=args.autotune, summary_out=summary)
         for e, rep in enumerate(reports):
             for wid, r in enumerate(rep if isinstance(rep, list) else [rep]):
                 lat = r.request_latency
@@ -243,6 +290,12 @@ def main(argv=None) -> None:
                       f"dup-avoided {r.duplicate_avoided_bytes} B, "
                       f"hit rate {r.hit_rate:.0%}) in {r.wall_seconds:.2f}s; "
                       f"mean |predicted-actual| {err*1e3:.2f} ms")
+        for e, (cal_err, uncal_err) in enumerate(
+                summary.get("epoch_errors", [])):
+            print(f"epoch {e}: calibrated mean |err| {cal_err*1e3:.2f} ms "
+                  f"vs uncalibrated {uncal_err*1e3:.2f} ms")
+        for name, desc in summary.get("installed_schedules", {}).items():
+            print(f"installed {desc}")
         return
 
     if args.arch is None:

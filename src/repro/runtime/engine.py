@@ -38,6 +38,8 @@ from repro.checkpoint.checkpointer import (
     load_segment_bricks,
     save_segment_bricks,
 )
+from repro.core.autotune import TunedSchedule, autotune_schedule
+from repro.core.calibration import CostCalibrator
 from repro.core.passes import PassPipeline, PlanPass
 from repro.core.spgemm import AiresConfig, AiresSpGEMM
 from repro.io.segment_cache import (
@@ -118,6 +120,18 @@ class EngineConfig:
     # (`repro.runtime.serving_loop`) injects a `VirtualClock` here so trace
     # replays and admission control run on one deterministic timeline.
     clock: Optional[Callable[[], float]] = None
+    # Online cost-model calibration (repro.core.calibration): when set,
+    # every admission/EDF/backpressure estimate prices against
+    # `calibrator.calibrated(tier_spec)` instead of the raw spec, the
+    # engine feeds each batch's RequestLatency stream back into it, and a
+    # generation bump invalidates the memoized `_pass_costs` (and
+    # reprices queued requests). None (default) = static costs, bit-exact
+    # to the pre-calibration engine.
+    calibrator: Optional[CostCalibrator] = None
+    # Explicit ELL bucket ladder for every registered graph's bricks
+    # (AiresConfig.ell_buckets); None keeps power-of-two buckets. Usually
+    # installed per graph by `install_schedule` rather than set here.
+    ell_buckets: Optional[Sequence[int]] = None
 
 
 @dataclasses.dataclass
@@ -394,6 +408,12 @@ class ServingEngine:
         # estimates, and the verdicts awaiting their BatchReport.
         self._pass_costs: Dict[tuple, float] = {}
         self._rejected: List[RejectedRequest] = []
+        # Calibration generation the memos were priced under; when the
+        # calibrator moves past it, cost_spec() clears the memos and
+        # reprices the queue. Installed autotuned schedules, per graph.
+        self._cost_generation = (config.calibrator.generation
+                                 if config.calibrator is not None else 0)
+        self._installed_schedules: Dict[str, TunedSchedule] = {}
 
     # ---- graph registry --------------------------------------------------
 
@@ -413,6 +433,8 @@ class ServingEngine:
                 straggler_deadline_s=cfg.straggler_deadline_s,
                 interpret=cfg.interpret,
                 plan_features=cfg.max_batch_features,
+                ell_buckets=(list(cfg.ell_buckets)
+                             if cfg.ell_buckets else None),
             ),
             segment_cache=self.cache,
             plan_passes=self.plan_pipeline,
@@ -424,6 +446,7 @@ class ServingEngine:
         against it — which are returned so the caller can re-route them."""
         a = self._graphs.pop(name, None)
         self._engines.pop(name, None)
+        self._installed_schedules.pop(name, None)
         self._pass_costs = {k: v for k, v in self._pass_costs.items()
                             if k[0] != name}
         if a is not None:
@@ -558,28 +581,65 @@ class ServingEngine:
 
     # ---- admission control (satellite of the pipeline-IR tentpole) -------
 
-    def _pass_cost(self, name: str, width: int) -> float:
+    def cost_spec(self) -> TierSpec:
+        """The `TierSpec` every cost estimate prices against. Without a
+        calibrator this is the configured spec, bit-exactly. With one,
+        it is `calibrator.calibrated(tier_spec)`; and whenever the
+        calibrator's generation has moved since the memos were priced,
+        the `_pass_costs` memo is dropped and every queued request whose
+        estimate an admission policy already filled is repriced — EDF
+        order and `max_queue_cost_s` backpressure see the new costs on
+        the very next decision."""
+        cal = self.config.calibrator
+        if cal is None:
+            return self.config.tier_spec
+        if cal.generation != self._cost_generation:
+            # Mark current *first*: repricing below re-enters cost_spec()
+            # via estimate_request_cost, which must not recurse.
+            self._cost_generation = cal.generation
+            self._pass_costs.clear()
+            self._queue = [
+                dataclasses.replace(
+                    r, estimated_cost_s=self.estimate_request_cost(r))
+                if r.estimated_cost_s > 0.0 else r
+                for r in self._queue]
+        return cal.calibrated(self.config.tier_spec)
+
+    def _pass_cost(self, name: str, width: int,
+                   spec: Optional[TierSpec] = None) -> float:
         """Modeled makespan of one streamed aggregation pass at `width`,
         via the engine's own `PipelinePlan.estimate()` (cold-cache reading:
         admission must hold even if the cache is evicted underneath the
-        queue). Memoized — the plan is pinned per graph, so the estimate
-        only varies with the feature width."""
+        queue). Memoized under the current `cost_spec()` — the plan is
+        pinned per graph, so the estimate only varies with the feature
+        width (and the calibration generation, which clears the memo).
+        An explicit `spec` bypasses the memo entirely — that is how
+        callers compare calibrated vs uncalibrated pricing."""
+        if spec is not None:
+            a = self._graphs[name]
+            plan = self._engines[name].stream_plan(
+                a, (a.n_rows, int(width)), spec=spec)
+            return plan.estimate(spec).makespan_s
+        # cost_spec() first: a generation move clears the memo below.
+        sp = self.cost_spec()
         key = (name, int(width))
         if key not in self._pass_costs:
             a = self._graphs[name]
             plan = self._engines[name].stream_plan(
-                a, (a.n_rows, int(width)), spec=self.config.tier_spec)
-            self._pass_costs[key] = plan.estimate(
-                self.config.tier_spec).makespan_s
+                a, (a.n_rows, int(width)), spec=sp)
+            self._pass_costs[key] = plan.estimate(sp).makespan_s
         return self._pass_costs[key]
 
-    def estimate_request_cost(self, request: InferenceRequest) -> float:
+    def estimate_request_cost(self, request: InferenceRequest,
+                              spec: Optional[TierSpec] = None) -> float:
         """Modeled seconds to serve `request`: one streamed pass per layer,
-        each at that layer's activation width."""
+        each at that layer's activation width. `spec` pins the pricing
+        spec (unmemoized); default is the calibrated `cost_spec()`."""
         widths = [int(request.features.shape[1])]
         for w in list(request.weights)[:-1]:
             widths.append(int(w.shape[1]))
-        return sum(self._pass_cost(request.graph, wd) for wd in widths)
+        return sum(self._pass_cost(request.graph, wd, spec=spec)
+                   for wd in widths)
 
     def estimate_group_cost(self, name: str, group: Sequence[InferenceRequest]
                             ) -> float:
@@ -617,7 +677,69 @@ class ServingEngine:
         continuous loop served groups leave it step by step, so the
         `max_queue_cost_s` backpressure prices the *remaining* queue, not
         a round snapshot."""
+        if self.config.calibrator is not None:
+            self.cost_spec()  # reprice stale entries before summing
         return sum(r.estimated_cost_s for r in self._queue)
+
+    def feed_latencies(self, latencies: Sequence[RequestLatency]) -> int:
+        """Feed one batch's `RequestLatency` stream into the configured
+        calibrator (no-op without one). `run_batch` calls this after every
+        drain; the continuous loop (`ContinuousServer.step`) calls it per
+        served group. Returns the number of samples folded in."""
+        cal = self.config.calibrator
+        if cal is None or not latencies:
+            return 0
+        return cal.observe_batch(latencies)
+
+    # ---- autotuned schedules (repro.core.autotune) ------------------------
+
+    def autotune(self, name: str, width: Optional[int] = None,
+                 install: bool = False) -> TunedSchedule:
+        """Search (coalescing min_bytes × pass order × ELL bucket set) for
+        one registered graph, priced under the calibrated `cost_spec()`;
+        optionally install the winner. Never predicted worse than default
+        (the default arm is always a candidate)."""
+        if name not in self._graphs:
+            raise KeyError(f"graph {name!r} not registered")
+        tuned = autotune_schedule(
+            self._engines[name], self._graphs[name], graph=name,
+            width=int(width or self.config.max_batch_features),
+            spec=self.cost_spec(), segment_cache=self.cache)
+        if install:
+            self.install_schedule(tuned)
+        return tuned
+
+    def install_schedule(self, tuned: TunedSchedule) -> None:
+        """Install an autotuned schedule for `tuned.graph`: that graph's
+        `AiresSpGEMM` gets its own `PassPipeline` in tuned order (other
+        graphs keep the shared engine pipeline), a changed ELL bucket set
+        drops the graph's prepared plans and cached bricks (its cache
+        namespaces carry a bucket tag, so stale default-bucket entries
+        are reclaimed, not shadowed), and the graph's cost memos are
+        invalidated so admission prices the tuned plans."""
+        name = tuned.graph
+        if name not in self._graphs:
+            raise KeyError(f"graph {name!r} not registered")
+        eng = self._engines[name]
+        eng.plan_passes = PassPipeline(
+            tuned.build_passes(), spec=self.config.tier_spec,
+            track_costs=False)
+        new_buckets = (list(tuned.ell_buckets)
+                       if tuned.ell_buckets is not None else None)
+        if new_buckets != (eng.config.ell_buckets or None):
+            eng.config = dataclasses.replace(eng.config,
+                                             ell_buckets=new_buckets)
+            eng.clear_cache()
+            if self.cache is not None:
+                self.cache.invalidate_prefix(
+                    AiresSpGEMM.graph_cache_prefix(self._graphs[name]))
+        self._pass_costs = {k: v for k, v in self._pass_costs.items()
+                            if k[0] != name}
+        self._installed_schedules[name] = tuned
+
+    @property
+    def installed_schedules(self) -> Dict[str, TunedSchedule]:
+        return dict(self._installed_schedules)
 
     def _reject(self, request: InferenceRequest, reason: str,
                 est: float) -> None:
@@ -721,8 +843,16 @@ class ServingEngine:
           * requests no admission policy already priced get their
             `estimated_cost_s` filled via `dataclasses.replace` — the
             estimate shares the plan preparation the stream needs anyway
-            (memoized per graph × width).
+            (memoized per graph × width). If the calibrator moved since
+            the queue was priced, *every* entry is repriced — `queue`
+            was detached from `self._queue` by the caller, so the
+            generation sweep in `cost_spec()` cannot reach it.
         """
+        stale = False
+        cal = self.config.calibrator
+        if cal is not None and cal.generation != self._cost_generation:
+            self.cost_spec()
+            stale = True
         ready: List[InferenceRequest] = []
         expired: List[RejectedRequest] = []
         for r in queue:
@@ -734,7 +864,7 @@ class ServingEngine:
                     estimated_cost_s=r.estimated_cost_s,
                     deadline_s=r.deadline_s, request_id=r.request_id))
                 continue
-            if r.estimated_cost_s <= 0.0:
+            if r.estimated_cost_s <= 0.0 or stale:
                 r = dataclasses.replace(
                     r, estimated_cost_s=self.estimate_request_cost(r))
             ready.append(r)
@@ -785,6 +915,7 @@ class ServingEngine:
             totals.merge(stats)
         results.sort(key=lambda r: r.request_id)
         latency.sort(key=lambda l: l.request_id)
+        self.feed_latencies(latency)
         dup = ((self.cache.stats.duplicate_avoided_bytes - dup0)
                if self.cache is not None else 0)
         rejected, self._rejected = self._rejected, []

@@ -49,6 +49,7 @@ from repro.runtime.engine import (
     InferenceRequest,
     InferenceResult,
     RejectedRequest,
+    RequestLatency,
     ServingEngine,
 )
 
@@ -305,8 +306,15 @@ class ContinuousServer:
         taken = {id(r) for r in members}
         self.engine._queue = [r for r in queue if id(r) not in taken]
         cost = self._group_cost((name, members))
-        results, _done, stats = self.engine.serve_group(
+        results, done_s, stats = self.engine.serve_group(
             name, members, time.perf_counter())
+        if self.engine.config.calibrator is not None:
+            # Continuous mode never runs run_batch, so the per-group
+            # latency stream must be fed to the calibrator here.
+            self.engine.feed_latencies([
+                RequestLatency(r.request_id, name, r.estimated_cost_s,
+                               *done_s[r.request_id])
+                for r in members])
         finished = self.clock.advance_to(now + cost)
         events = [
             ServeEvent(request_id=r.request_id, graph=name,

@@ -1,0 +1,355 @@
+"""Cost calibration + schedule autotuning (repro.core.calibration/autotune).
+
+Covers the observe -> fit -> reprice -> search loop end to end:
+
+  * calibrator recovery: the per-path least-squares fit recovers known
+    (bandwidth, latency) coefficients exactly from noiseless transfers,
+    and falls back to bandwidth-only on degenerate designs;
+  * convergence: the trust-blended calibrated spec's prediction error
+    against a drifted ground-truth system shrinks strictly round over
+    round (the property BENCH_autotune.json persists);
+  * identity: zero observations => `calibrated(base) is base`, and an
+    engine with a fresh calibrator prices and serves byte-identically to
+    one without (calibration off by default stays bit-exact);
+  * engine wiring: a calibrator generation move invalidates the
+    `_pass_costs` memo and reprices queued requests — both the live
+    queue and a detached `prepare_queue` list;
+  * autotuner: never predicted worse than default, tuned bucket sets
+    stream fewer bytes, `install_schedule` swaps the pipeline and keeps
+    serving outputs identical;
+  * spec-derived coalescing threshold (`min_bytes=None`).
+"""
+import dataclasses
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from benchmarks.bench_autotune import drifted_spec, replay_plan_transfers
+from repro.core import (
+    CostCalibrator,
+    TransferCoalescingPass,
+    TunedSchedule,
+    autotune_schedule,
+    bucket_set_bytes,
+    candidate_bucket_sets,
+    plan_memory_dense_features,
+)
+from repro.core.autotune import DEFAULT_MIN_BYTES, DEFAULT_PASS_ORDER
+from repro.io.tiers import Path, TieredMemorySystem, TPU_V5E_SYSTEM
+from repro.runtime import (
+    EngineConfig,
+    InferenceRequest,
+    ServingEngine,
+    VirtualClock,
+)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    from repro.data import (
+        SUITESPARSE_SPECS, generate_graph, normalized_adjacency, scaled_spec,
+    )
+
+    a = normalized_adjacency(generate_graph(
+        scaled_spec(SUITESPARSE_SPECS["socLJ1"], 1e-4), seed=0))
+    a.validate()
+    return a
+
+
+@pytest.fixture(scope="module")
+def budget(graph):
+    est = plan_memory_dense_features(graph, graph.n_rows, 64, float("inf"))
+    return int(est.m_b + est.m_c + 0.6 * graph.nbytes())
+
+
+def make_engine(graph, budget, **cfg) -> ServingEngine:
+    eng = ServingEngine(EngineConfig(
+        device_budget_bytes=budget, clock=VirtualClock(), **cfg))
+    eng.register_graph("g", graph)
+    return eng
+
+
+def request(graph, width=16, hidden=16, seed=1):
+    rng = np.random.default_rng(seed)
+    h = rng.standard_normal((graph.n_rows, width)).astype(np.float32)
+    w = [rng.standard_normal((width, hidden)).astype(np.float32)]
+    return InferenceRequest("g", h, w)
+
+
+# ---- calibrator fits -------------------------------------------------------
+
+
+def test_fit_recovers_coefficients_exactly():
+    true_bw, true_lat = 5e9, 1e-5
+    cal = CostCalibrator()
+    rng = np.random.default_rng(0)
+    for _ in range(32):
+        b = int(rng.integers(1 << 10, 1 << 22))
+        h = int(rng.integers(1, 4))
+        cal.observe_transfer(Path.DMA, b, true_lat * h + b / true_bw, hops=h)
+    bw, lat = cal.fitted(Path.DMA)
+    assert bw == pytest.approx(true_bw, rel=1e-6)
+    assert lat == pytest.approx(true_lat, rel=1e-6)
+
+
+def test_degenerate_design_falls_back_to_bandwidth_only():
+    """Every sample at the same (bytes, hops) cannot separate setup from
+    bandwidth: the fit keeps the base latency and still reproduces the
+    observed seconds at the observed size."""
+    spec = TPU_V5E_SYSTEM
+    base_lat = spec.latency_s[Path.GDS]
+    cal = CostCalibrator()
+    nbytes, seconds = 4096, 3.3e-5
+    for _ in range(5):
+        cal.observe_transfer(Path.GDS, nbytes, seconds)
+    bw, lat = cal.fitted(Path.GDS, base=spec)
+    assert lat == base_lat
+    assert lat + nbytes / bw == pytest.approx(seconds, rel=1e-9)
+
+
+def test_observe_records_recovers_payload_from_wire_bytes():
+    """TransferRecords store wire bytes (payload x hops); the fit must be
+    over payload, so a multi-hop record round-trips the model."""
+    true_bw, true_lat = 40e9, 2e-6
+    tms = TieredMemorySystem(dataclasses.replace(
+        TPU_V5E_SYSTEM, bw={**TPU_V5E_SYSTEM.bw, Path.ICI: true_bw},
+        latency_s={**TPU_V5E_SYSTEM.latency_s, Path.ICI: true_lat}))
+    from repro.io.tiers import MemoryTier
+    rng = np.random.default_rng(1)
+    for _ in range(16):
+        tms.transfer(Path.ICI, MemoryTier.DEVICE, MemoryTier.DEVICE,
+                     int(rng.integers(1 << 12, 1 << 20)),
+                     hops=int(rng.integers(1, 4)))
+    cal = CostCalibrator()
+    assert cal.observe_records(tms.transfers) == 16
+    bw, lat = cal.fitted(Path.ICI)
+    assert bw == pytest.approx(true_bw, rel=1e-6)
+    assert lat == pytest.approx(true_lat, rel=1e-6)
+
+
+def test_zero_observations_is_identity():
+    cal = CostCalibrator()
+    assert cal.calibrated(TPU_V5E_SYSTEM) is TPU_V5E_SYSTEM
+    assert cal.generation == 0
+    assert cal.fitted(Path.DMA) is None
+    assert cal.estimates(TPU_V5E_SYSTEM) == []
+
+
+def test_trust_blend_converges_geometrically():
+    """Each observation round moves the calibrated bandwidth a `blend`
+    fraction of the remaining gap (in inverse-bandwidth space)."""
+    spec = TPU_V5E_SYSTEM
+    true_bw = spec.bw[Path.DMA] * 0.5
+    cal = CostCalibrator(blend=0.5)
+    gaps = []
+    for _ in range(6):
+        cal.observe_transfer(Path.DMA, 1 << 20,
+                             spec.latency_s[Path.DMA]
+                             + (1 << 20) / true_bw)
+        calib = cal.calibrated(spec)
+        gaps.append(abs(1.0 / calib.bw[Path.DMA] - 1.0 / true_bw))
+    for prev, cur in zip(gaps, gaps[1:]):
+        assert cur < prev
+        assert cur == pytest.approx(prev * 0.5, rel=1e-6)
+
+
+def test_error_channel_scales_only_unfitted_paths():
+    spec = TPU_V5E_SYSTEM
+    cal = CostCalibrator()
+    # DMA gets a direct fit at exactly the base coefficients.
+    cal.observe_transfer(Path.DMA, 1 << 16,
+                         spec.latency_s[Path.DMA]
+                         + (1 << 16) / spec.bw[Path.DMA])
+    # Requests ran 2x slower than predicted.
+    assert cal.observe_batch(
+        [SimpleNamespace(predicted_s=1.0, processing_s=2.0)]) == 1
+    assert cal.error_scale > 1.0
+    calib = cal.calibrated(spec)
+    # Unfitted paths slow down by the error scale...
+    assert calib.bw[Path.GDS] < spec.bw[Path.GDS]
+    assert calib.latency_s[Path.GDS] > spec.latency_s[Path.GDS]
+    # ...fitted paths follow their own fit, and HBM never moves.
+    assert calib.bw[Path.DMA] == pytest.approx(spec.bw[Path.DMA], rel=1e-9)
+    assert calib.hbm_bw == spec.hbm_bw
+    assert calib.device_capacity == spec.device_capacity
+    # Samples without a usable prediction are skipped.
+    assert not cal.observe_error(
+        SimpleNamespace(predicted_s=0.0, processing_s=1.0))
+
+
+# ---- convergence against a drifted ground truth ----------------------------
+
+
+def test_prediction_error_strictly_decreases(graph, budget):
+    true_spec = drifted_spec(TPU_V5E_SYSTEM)
+    cal = CostCalibrator()
+    eng = make_engine(graph, budget, calibrator=cal)
+    req = request(graph)
+    errs = []
+    for _ in range(4):
+        predicted = eng.estimate_request_cost(req)
+        plan = eng._engines["g"].stream_plan(
+            graph, (graph.n_rows, 16), spec=true_spec)
+        actual = plan.estimate(true_spec).makespan_s
+        errs.append(abs(predicted - actual))
+        tms = TieredMemorySystem(true_spec)
+        replay_plan_transfers(plan, tms)
+        cal.observe_records(tms.transfers)
+    assert all(b < a for a, b in zip(errs, errs[1:])), errs
+    assert errs[-1] < 0.2 * errs[0]
+
+
+# ---- engine wiring ---------------------------------------------------------
+
+
+def test_calibration_off_is_bit_exact(graph, budget):
+    """A calibrator with zero observations must not perturb anything:
+    same predictions, byte-identical outputs, same byte accounting."""
+    def one(calibrator):
+        eng = make_engine(graph, budget, calibrator=calibrator)
+        eng.submit(request(graph, seed=7))
+        return eng.run_batch()
+
+    off, on = one(None), one(CostCalibrator())
+    assert ([l.predicted_s for l in off.request_latency]
+            == [l.predicted_s for l in on.request_latency])
+    assert off.uploaded_bytes == on.uploaded_bytes
+    assert off.cache_hit_bytes == on.cache_hit_bytes
+    for r0, r1 in zip(off.results, on.results):
+        assert np.array_equal(r0.output, r1.output)
+
+
+def test_generation_move_invalidates_memo_and_reprices_queue(graph, budget):
+    cal = CostCalibrator()
+    eng = make_engine(graph, budget, calibrator=cal,
+                      max_queue_cost_s=1e9)   # forces pricing at submit
+    receipt = eng.submit(request(graph))
+    c0 = receipt.estimated_cost_s
+    assert c0 > 0.0
+    assert eng._pass_costs
+    # Traffic shows DMA running 10x slower than spec.
+    slow_bw = TPU_V5E_SYSTEM.bw[Path.DMA] / 10.0
+    for nbytes in (1 << 16, 1 << 18, 1 << 20):
+        cal.observe_transfer(Path.DMA, nbytes,
+                             TPU_V5E_SYSTEM.latency_s[Path.DMA]
+                             + nbytes / slow_bw)
+    c1 = eng.estimate_request_cost(request(graph))
+    assert c1 > c0           # slower bandwidth => dearer pass
+    # The queued request was repriced by the generation sweep.
+    assert eng._queue[0].estimated_cost_s == pytest.approx(c1)
+    assert eng.queued_cost_s() == pytest.approx(c1)
+
+
+def test_prepare_queue_reprices_detached_queue(graph, budget):
+    """`run_batch` detaches the queue before `prepare_queue`; staleness
+    must still reprice it there (the cost_spec sweep can't reach it)."""
+    cal = CostCalibrator()
+    eng = make_engine(graph, budget, calibrator=cal, max_queue_cost_s=1e9)
+    eng.submit(request(graph))
+    queue, eng._queue = eng._queue, []
+    c0 = queue[0].estimated_cost_s
+    slow_bw = TPU_V5E_SYSTEM.bw[Path.DMA] / 10.0
+    cal.observe_transfer(Path.DMA, 1 << 20,
+                         TPU_V5E_SYSTEM.latency_s[Path.DMA]
+                         + (1 << 20) / slow_bw)
+    ready, expired = eng.prepare_queue(queue, eng.clock())
+    assert not expired
+    assert ready[0].estimated_cost_s > c0
+
+
+def test_run_batch_feeds_calibrator(graph, budget):
+    cal = CostCalibrator()
+    eng = make_engine(graph, budget, calibrator=cal, max_queue_cost_s=1e9)
+    eng.submit(request(graph))
+    assert cal.generation == 0
+    eng.run_batch()
+    assert cal.generation > 0          # error channel observed the batch
+    assert cal.error_scale != 1.0 or cal._error_n > 0
+
+
+# ---- autotuner -------------------------------------------------------------
+
+
+def test_autotune_never_predicted_worse_than_default(graph, budget):
+    eng = make_engine(graph, budget)
+    tuned = eng.autotune("g")
+    assert isinstance(tuned, TunedSchedule)
+    assert tuned.predicted_makespan_s <= tuned.default_makespan_s
+    assert tuned.predicted_speedup >= 1.0
+    assert tuned.ell_bytes <= tuned.default_ell_bytes
+    # Building the tuned passes round-trips the order.
+    names = []
+    for p in tuned.build_passes():
+        names.append("transfer-coalescing"
+                     if isinstance(p, TransferCoalescingPass)
+                     else "shard-placement")
+    assert tuple(names) == tuned.pass_order
+
+
+def test_autotune_respects_custom_grid(graph, budget):
+    eng = make_engine(graph, budget)
+    tuned = autotune_schedule(
+        eng._engines["g"], graph, graph="g", width=16,
+        spec=TPU_V5E_SYSTEM, min_bytes_grid=(DEFAULT_MIN_BYTES,),
+        bucket_sets=[None])
+    assert tuned.min_bytes == DEFAULT_MIN_BYTES
+    assert tuned.ell_buckets is None
+    assert tuned.pass_order in (DEFAULT_PASS_ORDER,
+                                tuple(reversed(DEFAULT_PASS_ORDER)))
+    assert tuned.predicted_makespan_s <= tuned.default_makespan_s
+
+
+def test_install_schedule_swaps_pipeline_and_keeps_outputs(graph, budget):
+    base = make_engine(graph, budget)
+    base.submit(request(graph, seed=11))
+    expect = base.run_batch().results[0].output
+
+    eng = make_engine(graph, budget)
+    eng.estimate_request_cost(request(graph))   # warm the memo
+    assert eng._pass_costs
+    tuned = eng.autotune("g", install=True)
+    assert eng.installed_schedules["g"] == tuned
+    assert not eng._pass_costs                  # memo invalidated
+    spg = eng._engines["g"]
+    assert spg.plan_passes is not None
+    if tuned.ell_buckets is not None:
+        assert spg.config.ell_buckets == list(tuned.ell_buckets)
+    # A tuned schedule reshapes transfers, never the math.
+    eng.submit(request(graph, seed=11))
+    got = eng.run_batch().results[0].output
+    np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-5)
+
+
+def test_bucket_set_bytes_and_candidates():
+    widths, rows = [3, 5, 9], [128, 256, 128]
+    pow2 = bucket_set_bytes(widths, rows, None, bm=128, bk=128)
+    exact = bucket_set_bytes(widths, rows, (3, 5, 9), bm=128, bk=128)
+    assert exact < pow2        # pow2 pads 3->4, 5->8, 9->16
+    with pytest.raises(ValueError):
+        bucket_set_bytes(widths, rows, (3, 5), bm=128, bk=128)  # 9 can't fit
+    cands = candidate_bucket_sets(widths)
+    assert cands[0] is None
+    assert (3, 5, 9) in cands
+    many = candidate_bucket_sets(list(range(1, 20)), max_buckets=4)
+    ladder = [c for c in many if c is not None][0]
+    assert len(ladder) <= 4 and max(ladder) == 19
+
+
+# ---- spec-derived coalescing threshold -------------------------------------
+
+
+def test_coalescing_threshold_derivation():
+    spec = TPU_V5E_SYSTEM
+    derived = TransferCoalescingPass(min_bytes=None)
+    assert derived.threshold(spec, Path.DMA) == max(
+        1, int(spec.bw[Path.DMA] * spec.latency_s[Path.DMA]))
+    # No spec to derive from => the documented static default.
+    assert (derived.threshold(None, Path.DMA)
+            == TransferCoalescingPass.DEFAULT_MIN_BYTES)
+    # Explicit min_bytes wins regardless of spec.
+    fixed = TransferCoalescingPass(min_bytes=4096)
+    assert fixed.threshold(spec, Path.DMA) == 4096
+    assert TransferCoalescingPass.DEFAULT_MIN_BYTES == 1 << 18
+    with pytest.raises(ValueError):
+        TransferCoalescingPass(min_bytes=0)
