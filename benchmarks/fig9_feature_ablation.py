@@ -12,6 +12,11 @@ same warm-epoch runs routed through a PassPipeline — shard-aware RoBW
 placement (with `--shards`: warm ici_bytes must come out strictly lower
 than the pass-free shard arm, the ISSUE 5 acceptance metric) plus
 transfer coalescing.
+
+`--partition` (with `--shards`) adds a partition-aware owner-map arm:
+the scheduler tiles RoBW over LDG cluster boundaries and installs a
+cluster->shard owner map, so warm-epoch remote hits concentrate on
+near shards instead of the CRC-uniform spread (repro.sparse.partition).
 """
 from __future__ import annotations
 
@@ -30,6 +35,7 @@ from repro.core import (
 )
 from repro.io import ShardedSegmentCache, TieredSegmentCache
 from repro.io.tiers import PAPER_GPU_SYSTEM
+from repro.sparse.partition import partition_graph
 
 DATASET = "kV2a"
 FEATURE_SIZES = [16, 32, 64, 128, 256]
@@ -41,9 +47,11 @@ def _pass_pipeline() -> PassPipeline:
 
 
 def run(cache: bool = False, shards: int = 0,
-        passes: bool = False) -> List[str]:
+        passes: bool = False, partition: bool = False) -> List[str]:
     rows = [f"# fig9 feature-size ablation on {DATASET} (scale={SCALE})"]
     a = dataset(DATASET)
+    part = (partition_graph(a, 2 * shards, n_shards=shards)
+            if partition and shards else None)
     for f in FEATURE_SIZES:
         feat = feature_spec(a, f)
         budget = budget_for(DATASET, a, feat)
@@ -89,14 +97,25 @@ def run(cache: bool = False, shards: int = 0,
                                         n_shards=shards),
                     f"fig9/F{f}/aires+cache{shards}shard+passes", ici=True,
                     passes=_pass_pipeline()))
+            if part is not None:
+                # Partition-aware owners: connectivity-clustered bricks
+                # co-located on their cluster's shard — warm ici_bytes
+                # drop from topology (vs the CRC shard row above).
+                rows.append(_warm_epoch_row(
+                    a, feat, budget,
+                    ShardedSegmentCache(device_budget_bytes=budget,
+                                        n_shards=shards),
+                    f"fig9/F{f}/aires+cache{shards}shard+partition",
+                    ici=True, partition=part))
     return rows
 
 
 def _warm_epoch_row(a, feat, budget, seg_cache, label, ici=False,
-                    passes=None) -> str:
+                    passes=None, partition=None) -> str:
     """Two consecutive AIRES epochs sharing `seg_cache`; report the warm one."""
     sched = SCHEDULERS["aires"](PAPER_GPU_SYSTEM, device_budget=budget,
-                                segment_cache=seg_cache, passes=passes)
+                                segment_cache=seg_cache, passes=passes,
+                                partition=partition)
     warm = cold = None
     for _ in range(2):  # epoch 1 fills, epoch 2 hits
         cold, warm = warm, sched.run(a, feat, dataset=DATASET).metrics
@@ -117,9 +136,12 @@ def main(argv=None) -> None:
     ap.add_argument("--passes", action="store_true",
                     help="add plan-rewrite-pass arms (shard placement + "
                          "transfer coalescing) next to the cache/shard arms")
+    ap.add_argument("--partition", action="store_true",
+                    help="add a partition-aware owner-map arm next to the "
+                         "shard arm (requires --shards)")
     args = ap.parse_args(argv)
     print("\n".join(run(cache=args.cache, shards=args.shards,
-                        passes=args.passes)))
+                        passes=args.passes, partition=args.partition)))
 
 
 if __name__ == "__main__":

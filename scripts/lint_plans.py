@@ -8,7 +8,9 @@ three production passes — so a pass or builder change that oversubscribes
 a tier, drops bytes, or leaves a hazard fails CI before any golden drifts.
 
 Exit status: nonzero if any plan yields an error-severity finding.
-Warnings are printed but do not fail the gate.
+Warnings are printed but do not fail the gate — except in the
+partition-aware section, where a `lint/shard-imbalance` warning means
+the cluster->shard balance cap regressed and does fail it.
 
 Usage:  PYTHONPATH=src python scripts/lint_plans.py
 """
@@ -36,10 +38,12 @@ from repro.core import (                  # noqa: E402
     analyze_plan,
     plan_memory_dense_features,
 )
+from repro.data import generate_sbm_graph, normalized_adjacency  # noqa: E402
 from repro.io import (                    # noqa: E402
     ShardedSegmentCache, TieredSegmentCache,
 )
-from repro.io.tiers import PAPER_GPU_SYSTEM  # noqa: E402
+from repro.io.tiers import ICI_RING, PAPER_GPU_SYSTEM  # noqa: E402
+from repro.sparse.partition import partition_graph  # noqa: E402
 
 DATASETS = ["rUSA", "kV2a", "kU1a", "socLJ1", "kP1a"]   # fig6 configs
 SPEC = PAPER_GPU_SYSTEM
@@ -107,6 +111,30 @@ def main() -> int:
         errors += len(report.errors)
         if not _strict_rewrite(f"strict passes / {label}", plan, cache):
             errors += 1
+
+    print("partition-aware sharded plan (lint/shard-imbalance gate):")
+    # Connectivity-clustered owner maps concentrate bricks on near shards
+    # — by design. The balance cap in `map_clusters_to_shards` keeps the
+    # heaviest shard under the analyzer's 2x-mean wire-byte threshold, so
+    # a partitioned plan must lint clean; regressing the cap (or the LDG
+    # clustering) trips `lint/shard-imbalance` here and fails the gate.
+    sbm = normalized_adjacency(generate_sbm_graph(
+        small.n_rows, 8 * small.n_rows, n_blocks=8, seed=0))
+    est = plan_memory_dense_features(sbm, sbm.n_rows, 16, float("inf"))
+    budget = int(est.m_b + est.m_c + 0.6 * sbm.nbytes())
+    cache = ShardedSegmentCache(device_budget_bytes=budget, n_shards=4,
+                                topology=ICI_RING)
+    part = partition_graph(sbm, 8, n_shards=4, topology=ICI_RING,
+                           local_shard=cache.local_shard)
+    eng = AiresSpGEMM(
+        AiresConfig(device_budget_bytes=budget, bm=8, bk=8),
+        segment_cache=cache, partition=part)
+    plan = eng.stream_plan(sbm, (sbm.n_rows, 16), spec=SPEC)
+    report = _lint("stream plan / partitioned shards (4)", plan, cache=cache)
+    errors += len(report.errors) + len(report.warnings)
+    if not _strict_rewrite("strict passes / partitioned shards (4)",
+                           plan, cache):
+        errors += 1
 
     if errors:
         print(f"FAIL: {errors} error-severity finding(s)")

@@ -122,6 +122,12 @@ RULES: Dict[str, str] = {
         "Two probes retain the same logical segment (graph, segment, "
         "wire format, shape) under conflicting content fingerprints — "
         "one of them is serving a stale generation.",
+    "lint/shard-imbalance":
+        "One shard owns more than 2x the mean per-shard wire bytes of "
+        "the plan's cache probes — the owner map (CRC, partition, or "
+        "placement overrides) is concentrating the working set on one "
+        "shard. Emitted only for plans with at least 8 probes per shard; "
+        "smaller plans cannot spread evenly by pigeonhole.",
 }
 
 # Module default for the interpreters' `analyze=None`: off in production
@@ -414,6 +420,8 @@ def _check_lints(plan: PipelinePlan, segment_cache: Any,
     tiers_after: List[set] = [set() for _ in plan.ops]
     touched: set = set()
     by_identity: Dict[Tuple, Dict[str, int]] = {}
+    owner_bytes: Dict[int, int] = {}
+    owned_probes = 0
     for i in range(len(plan.ops) - 1, -1, -1):
         tiers_after[i] = set(touched)
         touched |= _touched_tiers(plan.ops[i].op)
@@ -456,6 +464,16 @@ def _check_lints(plan: PipelinePlan, segment_cache: Any,
             fp = getattr(op.key, "fingerprint", None)
             if None not in ident and fp is not None:
                 by_identity.setdefault(ident, {}).setdefault(fp, i)
+            # Owner-balance accounting: a place_shard override wins, else
+            # the cache's owner map (partition or CRC) resolves the key.
+            if n_shards is not None and n_shards > 1:
+                s = op.place_shard
+                if s is None and hasattr(segment_cache, "owner_of"):
+                    s = segment_cache.owner_of(op.key)
+                if s is not None and 0 <= int(s) < n_shards:
+                    owner_bytes[int(s)] = (owner_bytes.get(int(s), 0)
+                                           + int(op.wire_bytes))
+                    owned_probes += 1
         elif isinstance(op, AllocOp):
             if op.tier not in tiers_after[i]:
                 findings.append(Finding(
@@ -472,6 +490,22 @@ def _check_lints(plan: PipelinePlan, segment_cache: Any,
                 f"{len(fps)} conflicting fingerprints "
                 f"{sorted(fps)!r} — one generation is stale",
                 tuple(sorted(fps.values()))))
+
+    # Probe-count gate: below 8 probes per shard, one big segment can
+    # exceed 2x the mean by pigeonhole alone — only enough probes make
+    # imbalance a property of the owner map rather than of granularity.
+    if (n_shards is not None and n_shards > 1
+            and owned_probes >= 8 * n_shards):
+        total = sum(owner_bytes.values())
+        mean = total / n_shards
+        worst = max(owner_bytes, key=lambda s: (owner_bytes[s], -s))
+        if mean > 0 and owner_bytes[worst] > 2 * mean:
+            findings.append(Finding(
+                "lint/shard-imbalance", SEVERITY_WARNING,
+                f"shard {worst} owns {owner_bytes[worst]} of the plan's "
+                f"{total} probe wire bytes — more than 2x the "
+                f"{mean:.0f}-byte per-shard mean across {n_shards} "
+                "shards", ()))
 
 
 def _touched_tiers(op: Any) -> set:

@@ -74,6 +74,13 @@ class TunedSchedule:
     # power-of-two bucket set (equal when ell_buckets is None).
     ell_bytes: int = 0
     default_ell_bytes: int = 0
+    # Partition-aware sharding (repro.sparse.partition): cluster count for
+    # connectivity-clustered owner maps, None = CRC owners (the bit-exact
+    # default). Priced by modeled warm-epoch ICI bytes, not makespan — a
+    # cold plan cannot see owner placement.
+    partition_clusters: Optional[int] = None
+    warm_ici_bytes: int = 0
+    default_warm_ici_bytes: int = 0
 
     @property
     def predicted_speedup(self) -> float:
@@ -84,7 +91,8 @@ class TunedSchedule:
     def is_default(self) -> bool:
         return (self.min_bytes == DEFAULT_MIN_BYTES
                 and self.pass_order == DEFAULT_PASS_ORDER
-                and self.ell_buckets is None)
+                and self.ell_buckets is None
+                and self.partition_clusters is None)
 
     def build_passes(self) -> List[PlanPass]:
         """Instantiate the tuned plan-rewrite passes, in tuned order."""
@@ -103,8 +111,13 @@ class TunedSchedule:
               else str(self.min_bytes))
         buckets = ("pow2" if self.ell_buckets is None
                    else list(self.ell_buckets))
+        part = ("crc" if self.partition_clusters is None
+                else f"{self.partition_clusters} clusters "
+                     f"({self.warm_ici_bytes}B warm-ICI vs "
+                     f"{self.default_warm_ici_bytes}B)")
         return (f"TunedSchedule({self.graph}: min_bytes={mb}, "
                 f"order={'>'.join(self.pass_order)}, buckets={buckets}, "
+                f"owners={part}, "
                 f"predicted {self.predicted_makespan_s:.3e}s vs default "
                 f"{self.default_makespan_s:.3e}s, "
                 f"x{self.predicted_speedup:.3f})")
@@ -171,7 +184,9 @@ def autotune_schedule(engine, a: CSR, graph: str, width: int,
                       spec: TierSpec, segment_cache=None,
                       min_bytes_grid: Sequence[Optional[int]] = MIN_BYTES_GRID,
                       bucket_sets: Optional[Sequence[Optional[Sequence[int]]]]
-                      = None, max_buckets: int = 4) -> TunedSchedule:
+                      = None, max_buckets: int = 4,
+                      cluster_grid: Optional[Sequence[int]] = None
+                      ) -> TunedSchedule:
     """Search (min_bytes × pass order × ELL bucket set) for one graph on
     one (calibrated) system spec; returns the best `TunedSchedule`.
 
@@ -243,15 +258,57 @@ def autotune_schedule(engine, a: CSR, graph: str, width: int,
         bucket_makespan = _trial_makespan(eng2, a, shape, spec, passes,
                                           segment_cache)
         if bucket_makespan < best_makespan:
-            return TunedSchedule(
-                graph=graph, min_bytes=best_mb, pass_order=best_order,
-                ell_buckets=best_buckets,
-                predicted_makespan_s=bucket_makespan,
-                default_makespan_s=default_makespan,
-                ell_bytes=best_bytes, default_ell_bytes=default_bytes)
+            best_makespan = bucket_makespan
+        else:
+            best_buckets = None
+    if best_buckets is None:
+        best_bytes = default_bytes
+
+    # Arm 3: partition cluster count, priced by modeled warm-epoch ICI
+    # bytes (Σ brick bytes × hops to its owner) — the quantity
+    # connectivity-clustered owner maps exist to cut. Cold makespan
+    # cannot see it: a cold plan streams every brick from host no matter
+    # who owns it. Trials run on throwaway engines with NO cache
+    # attached, so the live cache's namespaces, pins, and owner maps are
+    # untouched (and the `:p{k}` namespace tag isolates them even if a
+    # caller wires a cache in later). Strict <, so a uniform graph — or
+    # an unsharded cache — keeps the bit-exact CRC default.
+    partition_clusters: Optional[int] = None
+    warm_ici = default_ici = 0
+    n_shards = int(getattr(segment_cache, "n_shards", 1) or 1)
+    if n_shards > 1 and hasattr(segment_cache, "ici_hops"):
+        from repro.core.spgemm import AiresSpGEMM
+        from repro.io.shard_cache import shard_of
+        from repro.sparse.partition import partition_graph
+        prep0 = engine._prepare(a, shape, transpose=False)
+        default_ici = sum(
+            ell.nbytes() * segment_cache.ici_hops(shard_of(k, n_shards))
+            for ell, k in zip(prep0.ells, engine._segment_keys(prep0)))
+        warm_ici = default_ici
+        grid = (tuple(cluster_grid) if cluster_grid is not None
+                else (n_shards, 2 * n_shards, 4 * n_shards))
+        cfg3 = (dataclasses.replace(cfg, ell_buckets=list(best_buckets))
+                if best_buckets is not None else cfg)
+        for k in grid:
+            if not 1 < int(k) <= a.shape[0]:
+                continue
+            part = partition_graph(
+                a, int(k), n_shards=n_shards,
+                topology=segment_cache.topology,
+                local_shard=segment_cache.local_shard)
+            eng3 = AiresSpGEMM(cfg3, partition=part)
+            prep3 = eng3._prepare(a, shape, transpose=False)
+            owners = part.owners_for_plan(prep3.plan)
+            trial = sum(ell.nbytes() * segment_cache.ici_hops(o)
+                        for ell, o in zip(prep3.ells, owners))
+            if trial < warm_ici:  # ties keep fewer clusters / the default
+                warm_ici, partition_clusters = trial, int(k)
 
     return TunedSchedule(
         graph=graph, min_bytes=best_mb, pass_order=best_order,
-        ell_buckets=None, predicted_makespan_s=best_makespan,
+        ell_buckets=best_buckets, predicted_makespan_s=best_makespan,
         default_makespan_s=default_makespan,
-        ell_bytes=default_bytes, default_ell_bytes=default_bytes)
+        ell_bytes=best_bytes, default_ell_bytes=default_bytes,
+        partition_clusters=partition_clusters,
+        warm_ici_bytes=int(warm_ici),
+        default_warm_ici_bytes=int(default_ici))

@@ -256,6 +256,16 @@ class ShardPlacementPass(PlanPass):
     against this batch). Monotonicity — placement never increases modeled
     `ici_bytes` — holds by construction (every override sits at
     equal-or-fewer hops than the CRC owner) and is property-tested.
+
+    **Cluster co-placement** (partition-aware sharding): when the cache
+    carries a partition-derived cluster map (`ShardedSegmentCache.
+    cluster_of_key`, installed by `install_owner_map(..., clusters=...)`),
+    probes of the same cluster are placed as ONE unit through device
+    rules 1–3 — co-clustered bricks share neighbors, so splitting a
+    cluster across shards forfeits exactly the locality the partitioner
+    bought. A cluster that fits nowhere as a unit falls back to the
+    per-brick walk (host tiers included); probes with no cluster id take
+    the per-brick path bit-exactly as before.
     """
 
     name = "shard-placement"
@@ -282,37 +292,87 @@ class ShardPlacementPass(PlanPass):
                     best, best_hops = s, h
             return best
 
-        for bound in plan.ops:
-            op = bound.op
-            if not isinstance(op, CacheProbeOp):
-                continue
-            owner = cache.owner_of(op.key)
-            if owner == local or cache.tier_of(op.key) is not None:
-                continue
+        def place_one(op, owner):
             nbytes = int(op.wire_bytes)
             owner_hops = cache.ici_hops(owner)
             if nbytes <= dev[local]:
                 op.place_shard = local
                 dev[local] -= nbytes
-                continue
+                return
             if nbytes <= dev[owner]:
-                dev[owner] -= nbytes        # reserve; keep the CRC owner
-                continue
+                dev[owner] -= nbytes        # reserve; keep the owner
+                return
             s = nearest(dev, nbytes, owner_hops)
             if s is not None:
                 op.place_shard = s
                 dev[s] -= nbytes
-                continue
+                return
             if nbytes <= host[local]:
                 op.place_shard = local
                 host[local] -= nbytes
-                continue
+                return
             s = nearest(host, nbytes, owner_hops - 1)
             if s is not None:
                 op.place_shard = s
                 host[s] -= nbytes
             elif nbytes <= host[owner]:
                 host[owner] -= nbytes       # settles at the owner's host
+
+        def needs_placement(op):
+            return (cache.owner_of(op.key) != local
+                    and cache.tier_of(op.key) is None)
+
+        # Cluster groups among the probes that need placement: the
+        # members move as one unit through device rules 1-3. Grouping
+        # reads only static cache state (owner maps, residency), so the
+        # precomputed groups match the walk's own filter.
+        clustered = hasattr(cache, "cluster_of_key")
+        groups: dict = {}
+        if clustered:
+            for bound in plan.ops:
+                op = bound.op
+                if not isinstance(op, CacheProbeOp):
+                    continue
+                c = cache.cluster_of_key(op.key)
+                if c is not None and needs_placement(op):
+                    groups.setdefault(c, []).append(op)
+
+        placed_clusters: set = set()
+        for bound in plan.ops:
+            op = bound.op
+            if not isinstance(op, CacheProbeOp):
+                continue
+            if not needs_placement(op):
+                continue
+            owner = cache.owner_of(op.key)
+            c = cache.cluster_of_key(op.key) if clustered else None
+            if c is None:
+                place_one(op, owner)
+                continue
+            if c in placed_clusters:
+                continue
+            placed_clusters.add(c)
+            members = groups.get(c, [op])
+            total = sum(int(m.wire_bytes) for m in members)
+            owner_hops = cache.ici_hops(owner)
+            if total <= dev[local]:
+                for m in members:
+                    m.place_shard = local
+                dev[local] -= total
+                continue
+            if total <= dev[owner]:
+                dev[owner] -= total         # co-resident at the owner
+                continue
+            s = nearest(dev, total, owner_hops)
+            if s is not None:
+                for m in members:
+                    m.place_shard = s
+                dev[s] -= total
+                continue
+            # The cluster fits nowhere as a unit: per-brick rescue, in
+            # stream order, host tiers included.
+            for m in members:
+                place_one(m, cache.owner_of(m.key))
         return plan
 
 

@@ -60,6 +60,7 @@ def robw_partition(
     align: int = 1,
     value_bytes: Optional[int] = None,
     index_bytes: int = 4,
+    boundaries=None,
 ) -> RoBWPlan:
     """Algorithm 1, vectorized where possible.
 
@@ -67,10 +68,23 @@ def robw_partition(
     block, then continues from the next row (never mid-row). With align>1,
     the emitted boundary is rounded *down* to the alignment grid unless that
     would make the block empty.
+
+    `boundaries` is an optional row-index tiling grid (e.g.
+    `repro.sparse.partition.Partition.boundaries()` — the rows where the
+    cluster label changes): a segment's end is clamped down to the first
+    boundary strictly inside it, so no segment straddles a cluster
+    boundary and every segment maps to exactly one owner shard. Clamping
+    only shrinks segments (the calcMem budget and the complete-row
+    invariant both still hold); ``boundaries=None`` is byte-identical to
+    the unclamped plan.
     """
     if value_bytes is None:
         value_bytes = int(a.data.dtype.itemsize)
     n = a.n_rows
+    cuts = None
+    if boundaries is not None:
+        cuts = np.unique(np.asarray(boundaries, dtype=np.int64).ravel())
+        cuts = cuts[(cuts > 0) & (cuts < n)]
     segments: List[RoBWSegment] = []
     start = 0
     indptr = a.indptr
@@ -91,6 +105,12 @@ def robw_partition(
                 aligned = start + ((end - start) // align) * align
                 if aligned > start:
                     end = aligned
+            if cuts is not None and cuts.size:
+                # Clamp to the first tiling boundary strictly inside
+                # (start, end): cuts[j] > start implies end > start holds.
+                j = int(np.searchsorted(cuts, start, side="right"))
+                if j < cuts.size and int(cuts[j]) < end:
+                    end = int(cuts[j])
         nnz = int(indptr[end] - indptr[start])
         segments.append(
             RoBWSegment(
@@ -111,6 +131,7 @@ def robw_transpose_plan(
     value_bytes: Optional[int] = None,
     index_bytes: int = 4,
     a_t: Optional[CSR] = None,
+    boundaries=None,
 ) -> tuple:
     """RoBW plan over Aᵀ — the backward-pass streaming schedule.
 
@@ -125,7 +146,8 @@ def robw_transpose_plan(
     if a_t is None:
         a_t = csr_transpose(a)
     plan = robw_partition(a_t, m_a_bytes, align=align,
-                          value_bytes=value_bytes, index_bytes=index_bytes)
+                          value_bytes=value_bytes, index_bytes=index_bytes,
+                          boundaries=boundaries)
     return a_t, plan
 
 

@@ -56,6 +56,7 @@ from repro.sparse.formats import (
     graph_cache_prefix,
     segment_fingerprint,
 )
+from repro.sparse.partition import Partition
 from repro.sparse.updates import EdgeDelta
 
 # Both tiered caches speak the same get/put protocol; the engine and the
@@ -140,8 +141,16 @@ class AiresSpGEMM:
 
     def __init__(self, config: AiresConfig,
                  segment_cache: Optional[SegmentCacheLike] = None,
-                 plan_passes=None, analyze: Optional[bool] = None):
+                 plan_passes=None, analyze: Optional[bool] = None,
+                 partition: Optional[Partition] = None):
         self.config = config
+        # Partition-aware sharding (repro.sparse.partition): when set, RoBW
+        # plans tile over the partition's cluster boundaries, cache
+        # namespaces carry a `:p{n_clusters}` tag, and every prepared plan
+        # installs its partition-derived owner map on a sharded segment
+        # cache — warm-epoch ICI drops from topology, not retention
+        # heuristics. None keeps every byte of the unpartitioned behavior.
+        self.partition = partition
         # Optional tiered LRU over uploaded BlockELL payloads (shared across
         # engines by the serving layer): repeat streams of the same plan skip
         # the device_put entirely — see StreamStats.cache_hit_bytes.
@@ -161,7 +170,7 @@ class AiresSpGEMM:
         self.last_stream_stats: Optional[StreamStats] = None
         self.last_backward_stream_stats: Optional[StreamStats] = None
 
-    def plan(self, a: CSR, h_shape) -> tuple:
+    def plan(self, a: CSR, h_shape, boundaries=None) -> tuple:
         mem = plan_memory_unified(
             a, FeatureSpec(h_shape[0], h_shape[1], 4, 0.0),
             m_total=self.config.device_budget_bytes)
@@ -169,7 +178,8 @@ class AiresSpGEMM:
             raise MemoryError(
                 f"AIRES plan infeasible: budget {self.config.device_budget_bytes}"
                 f" < M_B+M_C = {mem.m_b + mem.m_c:.0f}")
-        plan = robw_partition(a, int(mem.m_a), align=self.config.align)
+        plan = robw_partition(a, int(mem.m_a), align=self.config.align,
+                              boundaries=boundaries)
         return mem, plan
 
     def reset_stats_logs(self) -> None:
@@ -235,12 +245,21 @@ class AiresSpGEMM:
         # every width up to plan_features.
         plan_shape = (dense_shape[0],
                       max(cfg.plan_features or 0, dense_shape[1]))
+        part = self.partition
         key = (csr_fingerprint(a), a.nnz, a.shape, plan_shape, transpose,
-               tuple(cfg.ell_buckets or ()))
+               tuple(cfg.ell_buckets or ()),
+               0 if part is None else part.token)
         hit = self._prepared.pop(key, None)
         if hit is not None:
             self._prepared[key] = hit  # re-insert: most-recently-used
             return hit
+        # The partition tiles the *streamed* orientation: forward streams
+        # A's rows directly; the transposed (backward) direction only lines
+        # up for square graphs, where Aᵀ's rows are the same vertex set.
+        part_rows = a.shape[1] if transpose else a.shape[0]
+        if part is not None and part.n_rows != part_rows:
+            part = None
+        bounds = None if part is None else part.boundaries()
         if transpose:
             # Plan on Aᵀ: the backward output dH is (n_cols, F), so M_C and
             # the Eq. 7 segment budget must be sized for the transposed
@@ -255,21 +274,29 @@ class AiresSpGEMM:
                     f"{cfg.device_budget_bytes} < M_B+M_C = "
                     f"{mem.m_b + mem.m_c:.0f}")
             _, plan = robw_transpose_plan(a, int(mem.m_a), align=cfg.align,
-                                          a_t=a_t)
+                                          a_t=a_t, boundaries=bounds)
             stream_a = a_t
         else:
-            mem, plan = self.plan(a, plan_shape)
+            mem, plan = self.plan(a, plan_shape, boundaries=bounds)
             stream_a = a
         # Explicit bucket ladders tag the namespace: their bricks pad
         # differently, so they must never collide with (or warm-start
         # from) the default power-of-two entries. No buckets = the
-        # pre-autotune namespace, byte-for-byte.
+        # pre-autotune namespace, byte-for-byte. Partitioned plans tag the
+        # cluster count (`:p{k}`) the same way: their segment boundaries
+        # differ, so bricks from different cluster counts must never
+        # collide — and autotune's cluster-count trials each probe their
+        # own namespace instead of clobbering the live one. The tag is
+        # count-only on purpose: `Partition.refine` after an edge delta
+        # keeps the count, so the namespace — and every untouched brick in
+        # it — survives, exactly like the unpartitioned delta path.
         bucket_tag = ("" if not cfg.ell_buckets else
                       ":e" + "x".join(str(b) for b in cfg.ell_buckets))
+        part_tag = "" if part is None else f":p{part.n_clusters}"
         cache_ns = (f"{self.graph_cache_prefix(a)}"
                     f":{'bwd' if transpose else 'fwd'}"
                     f":w{plan_shape[1]}:b{cfg.device_budget_bytes}"
-                    f"{bucket_tag}")
+                    f"{bucket_tag}{part_tag}")
         prepared = _Prepared(
             a=stream_a, mem=mem, plan=plan, segs=list(plan.segments),
             ells=list(segments_to_block_ell(stream_a, plan,
@@ -282,10 +309,34 @@ class AiresSpGEMM:
             # Pin the source graph so the id()-derived namespace can't be
             # recycled into stale hits while cached bricks live.
             self.segment_cache.pin(cache_ns, a)
+        if part is not None:
+            self._install_owner_map(part, prepared, transpose)
         self._prepared[key] = prepared
         while len(self._prepared) > self.PREPARED_CACHE_MAX:
             self._prepared.pop(next(iter(self._prepared)))
         return prepared
+
+    def _install_owner_map(self, part: Partition, prepared: _Prepared,
+                           transpose: bool) -> None:
+        """Project `part` onto one prepared plan's segments and install the
+        resulting owner map on the sharded segment cache.
+
+        No-op for unsharded caches, caches without owner-map support, or
+        shard-count mismatches (a partition packed for 4 shards says
+        nothing about an 8-shard cache). The transposed orientation votes
+        with Aᵀ's row nnz — `part.row_nnz` counts A's rows, which are Aᵀ's
+        *columns*.
+        """
+        cache = self.segment_cache
+        if (cache is None or part.n_shards <= 1
+                or not hasattr(cache, "install_owner_map")
+                or part.n_shards != getattr(cache, "n_shards", 1)):
+            return
+        row_nnz = (np.diff(prepared.a.indptr).astype(np.int64)
+                   if transpose else None)
+        clusters = part.clusters_for_plan(prepared.plan, row_nnz=row_nnz)
+        owners = [int(part.cluster_to_shard[c]) for c in clusters]
+        cache.install_owner_map(prepared.cache_ns, owners, clusters)
 
     # ---- incremental updates (evolving graphs) ---------------------------
 
@@ -317,9 +368,17 @@ class AiresSpGEMM:
         old_fp = csr_fingerprint(old)
         cfg = self.config
         stats = UpdateStats()
+        if (self.partition is not None
+                and self.partition.n_rows == new.shape[0]):
+            # Delta re-clustering: only the touched rows re-vote their
+            # cluster label (majority neighbor); the cluster→shard map —
+            # and therefore the `:p{k}` namespace and every untouched
+            # brick's owner — carries over verbatim.
+            self.partition = self.partition.refine(new, delta.touched_rows)
+        token = 0 if self.partition is None else self.partition.token
         for key in [k for k in self._prepared if k[0] == old_fp]:
             prep = self._prepared.pop(key)
-            _, _, _, plan_shape, transpose, buckets = key
+            _, _, _, plan_shape, transpose, buckets, _ = key
             if transpose:
                 stream_new = self.transpose_of(new)
                 touched = delta.touched_cols
@@ -352,10 +411,17 @@ class AiresSpGEMM:
                                  segs=segs, ells=ells,
                                  cache_ns=prep.cache_ns, fps=fps)
             self._prepared[(csr_fingerprint(new), new.nnz, new.shape,
-                            plan_shape, transpose, buckets)] = new_prep
+                            plan_shape, transpose, buckets,
+                            token)] = new_prep
             if self.segment_cache is not None:
                 # Re-pin: the namespace now answers for the updated graph.
                 self.segment_cache.pin(prep.cache_ns, new)
+            part = self.partition
+            if part is not None and part.n_rows == stream_new.shape[0]:
+                # Refresh the namespace's owner map from the refined
+                # labels: migrated rows may now live in a different
+                # cluster, and the re-tiled plan's segments need owners.
+                self._install_owner_map(part, new_prep, transpose)
             fresh = set(self._segment_keys(new_prep))
             stats.stale_keys.extend(k for k in old_keys if k not in fresh)
             stats.plans_updated += 1

@@ -2,6 +2,7 @@ from repro.data.graphs import (
     GraphSpec,
     SUITESPARSE_SPECS,
     generate_graph,
+    generate_sbm_graph,
     normalized_adjacency,
     scaled_spec,
 )
@@ -9,6 +10,6 @@ from repro.data.tokens import TokenPipeline, synthetic_token_batches
 
 __all__ = [
     "GraphSpec", "SUITESPARSE_SPECS", "generate_graph",
-    "normalized_adjacency", "scaled_spec",
+    "generate_sbm_graph", "normalized_adjacency", "scaled_spec",
     "TokenPipeline", "synthetic_token_batches",
 ]

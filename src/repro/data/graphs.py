@@ -86,8 +86,46 @@ def generate_graph(spec: GraphSpec, seed: int = 0,
         rows, cols = _uniform_edges(n, m, rng)
     data = np.ones(m, dtype=dtype)
     coo = COO(rows=rows, cols=cols, data=data, shape=(n, n))
-    a = coo.to_csr()
     # Deduplicate parallel edges (keep structure simple & exact).
+    return _dedup_csr(coo.to_csr(), dtype)
+
+
+def generate_sbm_graph(n_vertices: int, n_edges: int, n_blocks: int = 4,
+                       p_in: float = 0.9, seed: int = 0,
+                       dtype=np.float32) -> CSR:
+    """Stochastic-block-model adjacency: `n_blocks` contiguous vertex
+    blocks, a `p_in` fraction of edges endpoint-confined to one block and
+    the rest crossing blocks uniformly.
+
+    This is the clustered-community structure partition-aware sharding
+    exploits (see `repro.sparse.partition` and benchmarks/bench_partition):
+    connectivity clustering recovers the blocks, so a cluster-aligned
+    owner map keeps each block's bricks on one shard. Parallel edges are
+    deduplicated exactly like `generate_graph`.
+    """
+    if n_blocks < 1:
+        raise ValueError(f"n_blocks must be >= 1, got {n_blocks}")
+    if not 0.0 <= p_in <= 1.0:
+        raise ValueError(f"p_in must be in [0, 1], got {p_in}")
+    rng = np.random.default_rng(seed)
+    n, m = int(n_vertices), int(n_edges)
+    block = max(1, n // int(n_blocks))
+    rows = rng.integers(0, n, size=m, dtype=np.int64)
+    # In-block endpoints: a uniform column inside the row's own block.
+    b_lo = (rows // block) * block
+    b_hi = np.minimum(b_lo + block, n)
+    in_cols = b_lo + (rng.integers(0, block, size=m, dtype=np.int64)
+                      % (b_hi - b_lo))
+    out_cols = rng.integers(0, n, size=m, dtype=np.int64)
+    cols = np.where(rng.random(m) < p_in, in_cols, out_cols)
+    coo = COO(rows=rows, cols=cols, data=np.ones(m, dtype=dtype),
+              shape=(n, n))
+    return _dedup_csr(coo.to_csr(), dtype)
+
+
+def _dedup_csr(a: CSR, dtype) -> CSR:
+    """Drop parallel edges, unit weights (shared by the generators)."""
+    n = a.n_rows
     dedup_indices = []
     dedup_data = []
     indptr = [0]
@@ -99,9 +137,11 @@ def generate_graph(spec: GraphSpec, seed: int = 0,
         indptr.append(indptr[-1] + cols_i.shape[0])
     return CSR(
         indptr=np.asarray(indptr, dtype=np.int64),
-        indices=np.concatenate(dedup_indices) if dedup_indices else np.empty(0, np.int64),
-        data=np.concatenate(dedup_data) if dedup_data else np.empty(0, dtype),
-        shape=(n, n),
+        indices=(np.concatenate(dedup_indices) if dedup_indices
+                 else np.empty(0, np.int64)),
+        data=(np.concatenate(dedup_data) if dedup_data
+              else np.empty(0, dtype)),
+        shape=a.shape,
     )
 
 

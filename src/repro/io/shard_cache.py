@@ -10,7 +10,11 @@ mapping (arXiv:2308.11825):
 
   * every `SegmentKey` has one deterministic **owner shard**
     (`shard_of(key)`, a stable CRC over the key — NOT Python's randomized
-    `hash`), so a brick is retained exactly once across the mesh;
+    `hash`), so a brick is retained exactly once across the mesh; a
+    partition-derived **owner map** (`install_owner_map`, fed by
+    `repro.sparse.partition`) replaces the CRC default per namespace so
+    connectivity-clustered row blocks co-locate on the shard that
+    streams them;
   * per-shard device budgets and LRU state are **independent** — one hot
     graph cannot evict another graph's bricks from a different shard;
   * a hit whose owner is a **remote** shard ships the brick over the ICI
@@ -49,13 +53,30 @@ from repro.io.tiers import (
 )
 
 
+def _shard_blob(key: SegmentKey) -> bytes:
+    """Explicit field serialization of a key's four identity fields.
+
+    Byte-identical to ``repr((graph_id, segment_id, wire_format, shape))``
+    for canonical keys (str namespace, int segment id, str wire format,
+    tuple-of-int shape) — including the 1-tuple trailing comma — but built
+    field by field, so a `SegmentKey` dataclass-repr change (a new field,
+    a renamed one) can never silently reshuffle every owner. The CRC of a
+    known key is pinned in tests/test_shard_cache.py.
+    """
+    dims = [repr(int(d)) for d in key.shape]
+    shape = "(" + ", ".join(dims) + ("," if len(dims) == 1 else "") + ")"
+    return (f"({key.graph_id!r}, {int(key.segment_id)!r}, "
+            f"{key.wire_format!r}, {shape})").encode()
+
+
 def shard_of(key: SegmentKey, n_shards: int) -> int:
     """Deterministic owner shard of a segment key.
 
-    CRC32 over the key's repr: stable within a process (unlike `hash()`,
-    which is salted per interpreter for str fields), uniform enough to
-    balance bricks across shards, and identical for replicated workers
-    looking at the same key.
+    CRC32 over an explicit serialization of the key's identity fields
+    (`_shard_blob`): stable within a process (unlike `hash()`, which is
+    salted per interpreter for str fields), uniform enough to balance
+    bricks across shards, and identical for replicated workers looking at
+    the same key.
 
     Hashes exactly the four identity fields — `SegmentKey.fingerprint` is
     deliberately excluded, so a segment keeps its owner shard across edge
@@ -64,9 +85,7 @@ def shard_of(key: SegmentKey, n_shards: int) -> int:
     """
     if n_shards <= 1:
         return 0
-    blob = repr((key.graph_id, key.segment_id, key.wire_format,
-                 key.shape)).encode()
-    return zlib.crc32(blob) % n_shards
+    return zlib.crc32(_shard_blob(key)) % n_shards
 
 
 def _place(value: Any, device) -> Any:
@@ -156,10 +175,21 @@ class ShardedSegmentCache:
         self._ici_bytes = 0
         self.last_get_transfer_s: float = 0.0
         # Placement overrides (the owner map): keys whose owner differs
-        # from the CRC default because a put() carried an explicit shard —
-        # the shard-placement rewrite pass pins a graph's hot bricks to the
-        # shard that consumes them. Queried via `owner_of`.
+        # from the default owner because a put() carried an explicit shard
+        # — the shard-placement rewrite pass pins a graph's hot bricks to
+        # the shard that consumes them. Queried via `owner_of`.
         self._locations: Dict[SegmentKey, int] = {}
+        # Partition-derived owner maps, keyed by cache namespace
+        # (SegmentKey.graph_id): owners[segment_id] replaces the CRC
+        # default for that namespace's keys (`install_owner_map`), with an
+        # optional parallel cluster-id map the ShardPlacementPass groups
+        # co-placements by. Dropped with the namespace on prefix/graph
+        # invalidation; deliberately NOT dropped by `clear()` or
+        # `invalidate_keys` — the map is placement *policy* derived from
+        # the graph's topology, not cached content, so re-streamed and
+        # warm-started bricks land back on their partition owners.
+        self._owner_maps: Dict[str, List[int]] = {}
+        self._cluster_maps: Dict[str, List[int]] = {}
 
     @classmethod
     def from_mesh(cls, mesh, device_budget_bytes: int, axis: str = "cache",
@@ -211,11 +241,67 @@ class ShardedSegmentCache:
         return self._owner(key).tier_of(key)
 
     def owner_of(self, key: SegmentKey) -> int:
-        """The shard that owns (or would own) `key`: a placement override
-        if one was recorded by `put(..., shard=...)`, else the
-        deterministic CRC owner. This is the owner-map query the
-        shard-placement rewrite pass builds on."""
-        return self._locations.get(key, shard_of(key, self.n_shards))
+        """The shard that owns (or would own) `key`. Resolution order:
+        a placement override recorded by `put(..., shard=...)`, then the
+        namespace's installed partition owner map, then the deterministic
+        CRC owner. This is the owner-map query the shard-placement
+        rewrite pass builds on."""
+        loc = self._locations.get(key)
+        if loc is not None:
+            return loc
+        return self._default_owner(key)
+
+    def _default_owner(self, key: SegmentKey) -> int:
+        """`key`'s owner before any per-key placement override: the
+        installed partition owner map when one covers it, else CRC."""
+        owners = self._owner_maps.get(key.graph_id)
+        if owners is not None and 0 <= key.segment_id < len(owners):
+            return owners[key.segment_id]
+        return shard_of(key, self.n_shards)
+
+    def install_owner_map(self, namespace: str, owners: Sequence[int],
+                          clusters: Optional[Sequence[int]] = None) -> None:
+        """Install a partition-derived owner map for one cache namespace:
+        `owners[i]` owns segment i of `namespace` (overriding the CRC
+        default; per-key `put(shard=)` overrides still win). `clusters`
+        is the parallel majority-cluster id per segment — what
+        `cluster_of_key` serves to the ShardPlacementPass so co-clustered
+        bricks are co-placed. Reinstalling replaces the previous map."""
+        owners = [int(s) for s in owners]
+        for s in owners:
+            if not 0 <= s < self.n_shards:
+                raise ValueError(
+                    f"owner map shard {s} outside [0, {self.n_shards})")
+        if clusters is not None and len(clusters) != len(owners):
+            raise ValueError(
+                f"cluster map length {len(clusters)} != owner map "
+                f"length {len(owners)}")
+        self._owner_maps[str(namespace)] = owners
+        if clusters is not None:
+            self._cluster_maps[str(namespace)] = [int(c) for c in clusters]
+        else:
+            self._cluster_maps.pop(str(namespace), None)
+
+    def drop_owner_map(self, namespace: str) -> bool:
+        """Remove one namespace's installed owner (and cluster) map;
+        returns whether a map was installed."""
+        had = self._owner_maps.pop(str(namespace), None) is not None
+        self._cluster_maps.pop(str(namespace), None)
+        return had
+
+    def owner_map(self, namespace: str) -> Optional[List[int]]:
+        """The installed owner map for `namespace` (a copy), or None."""
+        owners = self._owner_maps.get(str(namespace))
+        return list(owners) if owners is not None else None
+
+    def cluster_of_key(self, key: SegmentKey) -> Optional[int]:
+        """`key`'s majority-cluster id under its namespace's installed
+        cluster map, or None — the grouping handle the
+        ShardPlacementPass co-places whole clusters by."""
+        clusters = self._cluster_maps.get(key.graph_id)
+        if clusters is not None and 0 <= key.segment_id < len(clusters):
+            return clusters[key.segment_id]
+        return None
 
     def shard_index_of(self, key: SegmentKey) -> int:
         return self.owner_of(key)
@@ -276,6 +362,10 @@ class ShardedSegmentCache:
         for key in [k for k in self._locations
                     if prefix_matches(k.graph_id, prefix, exact)]:
             del self._locations[key]
+        for ns in [ns for ns in self._owner_maps
+                   if prefix_matches(ns, prefix, exact)]:
+            del self._owner_maps[ns]
+            self._cluster_maps.pop(ns, None)
 
     def clear(self) -> None:
         self._locations.clear()
@@ -354,7 +444,12 @@ class ShardedSegmentCache:
                              f"[0, {self.n_shards})")
         if dst != cur:
             self.shards[cur].discard(key)
-        if dst != shard_of(key, self.n_shards):
+        # Record the override only when it differs from the *default*
+        # owner — which is the installed partition owner map when one
+        # covers this key, not the raw CRC: a put landing exactly on the
+        # partition owner needs no per-key entry (and must not pin one,
+        # or a later owner-map reinstall could not move it).
+        if dst != self._default_owner(key):
             self._locations[key] = dst
         else:
             self._locations.pop(key, None)

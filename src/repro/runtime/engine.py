@@ -59,6 +59,7 @@ from repro.io.tiers import (
     TPU_V5E_SYSTEM,
 )
 from repro.sparse.formats import CSR, BlockELL
+from repro.sparse.partition import Partition, partition_graph
 from repro.sparse.updates import EdgeDelta, apply_edge_updates
 
 
@@ -132,6 +133,15 @@ class EngineConfig:
     # (AiresConfig.ell_buckets); None keeps power-of-two buckets. Usually
     # installed per graph by `install_schedule` rather than set here.
     ell_buckets: Optional[Sequence[int]] = None
+    # Partition-aware sharding (repro.sparse.partition): cluster count for
+    # the connectivity clustering run over every registered graph when the
+    # segment cache is sharded (`cache_shards > 1`). The partition's owner
+    # map replaces CRC owners for that graph's bricks, cutting warm-epoch
+    # ICI bytes from topology. 0 (default) = off, byte-identical to CRC
+    # sharding; ignored on unsharded caches. Per-graph overrides: pass
+    # `partition=` to register_graph, or install an autotuned schedule
+    # whose `partition_clusters` is set.
+    partition_shards: int = 0
 
 
 @dataclasses.dataclass
@@ -417,15 +427,26 @@ class ServingEngine:
 
     # ---- graph registry --------------------------------------------------
 
-    def register_graph(self, name: str, a: CSR) -> None:
+    def register_graph(self, name: str, a: CSR,
+                       partition: Optional[Partition] = None) -> None:
         """Make a graph servable. CSRs are immutable once registered (the
-        cache keys on identity + structure, like AiresSpGEMM's plan cache)."""
+        cache keys on identity + structure, like AiresSpGEMM's plan cache).
+
+        `partition` installs a connectivity-clustered owner map for this
+        graph's bricks (see `repro.sparse.partition`); when omitted and
+        `EngineConfig.partition_shards > 0` on a sharded cache, one is
+        clustered here from the graph's CSR adjacency. Partitioned graphs
+        prepare their forward plan eagerly so the owner map is installed
+        on the cache before any `warm_start` puts route bricks to owners.
+        """
         if name in self._graphs:
             raise ValueError(f"graph {name!r} already registered")
         a.validate()
         cfg = self.config
+        if partition is None:
+            partition = self._auto_partition(a)
         self._graphs[name] = a
-        self._engines[name] = AiresSpGEMM(
+        eng = AiresSpGEMM(
             AiresConfig(
                 device_budget_bytes=cfg.device_budget_bytes,
                 bm=cfg.bm, bk=cfg.bk, align=cfg.align,
@@ -438,7 +459,25 @@ class ServingEngine:
             ),
             segment_cache=self.cache,
             plan_passes=self.plan_pipeline,
-            analyze=cfg.analyze_plans)
+            analyze=cfg.analyze_plans,
+            partition=partition)
+        self._engines[name] = eng
+        if partition is not None and self.cache is not None:
+            eng._prepare(a, (a.n_rows, cfg.max_batch_features),
+                         transpose=False)
+
+    def _auto_partition(self, a: CSR) -> Optional[Partition]:
+        """Cluster `a` per `EngineConfig.partition_shards` — None when the
+        knob is off or the cache is not sharded (CRC owners are already
+        correct, and an owner map of all-zeros would only add overhead)."""
+        k = int(self.config.partition_shards or 0)
+        n_shards = int(getattr(self.cache, "n_shards", 1) or 1)
+        if k <= 0 or n_shards <= 1:
+            return None
+        return partition_graph(
+            a, k, n_shards=n_shards,
+            topology=self.config.ici_topology,
+            local_shard=int(getattr(self.cache, "local_shard", 0)))
 
     def evict_graph(self, name: str) -> List[InferenceRequest]:
         """Drop a graph, its engine, its cached segments (every namespace,
@@ -724,11 +763,29 @@ class ServingEngine:
         eng.plan_passes = PassPipeline(
             tuned.build_passes(), spec=self.config.tier_spec,
             track_costs=False)
+        changed = False
         new_buckets = (list(tuned.ell_buckets)
                        if tuned.ell_buckets is not None else None)
         if new_buckets != (eng.config.ell_buckets or None):
             eng.config = dataclasses.replace(eng.config,
                                              ell_buckets=new_buckets)
+            changed = True
+        # A changed cluster count re-partitions the graph (same clustering
+        # the autotuner's trial arm priced); like a bucket change, the old
+        # namespaces (different `:p` tag) are reclaimed, not shadowed.
+        old_clusters = (eng.partition.n_clusters
+                        if eng.partition is not None else None)
+        if tuned.partition_clusters != old_clusters:
+            if tuned.partition_clusters is None:
+                eng.partition = None
+            else:
+                eng.partition = partition_graph(
+                    self._graphs[name], int(tuned.partition_clusters),
+                    n_shards=int(getattr(self.cache, "n_shards", 1) or 1),
+                    topology=self.config.ici_topology,
+                    local_shard=int(getattr(self.cache, "local_shard", 0)))
+            changed = True
+        if changed:
             eng.clear_cache()
             if self.cache is not None:
                 self.cache.invalidate_prefix(

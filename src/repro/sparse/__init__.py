@@ -24,6 +24,11 @@ from repro.sparse.updates import (
     EdgeDelta,
     apply_edge_updates,
 )
+from repro.sparse.partition import (
+    Partition,
+    map_clusters_to_shards,
+    partition_graph,
+)
 from repro.sparse.blocking import (
     tile_csr_to_block_ell,
     block_ell_to_dense,
@@ -41,6 +46,7 @@ __all__ = [
     "csr_to_csc", "csr_transpose", "csr_row_slice",
     "csr_fingerprint", "segment_fingerprint", "graph_cache_prefix",
     "EdgeDelta", "apply_edge_updates",
+    "Partition", "map_clusters_to_shards", "partition_graph",
     "tile_csr_to_block_ell", "block_ell_to_dense", "round_up",
     "spgemm_csr_dense", "spgemm_csr_csc", "spmm_dense_ref",
 ]

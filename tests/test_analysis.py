@@ -373,6 +373,28 @@ def test_lint_duplicate_key_conflicting_fingerprints():
     assert analyze_plan(ok).by_rule("lint/duplicate-key-conflict") == []
 
 
+def test_lint_shard_imbalance():
+    cache = ShardedSegmentCache(device_budget_bytes=1 << 20, n_shards=4)
+    # 32 probes (the 8-per-shard floor) all owned by shard 0: its bytes
+    # are 4x the per-shard mean — a property of the owner map, not size.
+    plan = _plan("p")
+    for i in range(32):
+        plan.add(_probe(_key(i), place_shard=0), "p", LANE_DMA)
+    report = analyze_plan(plan, segment_cache=cache)
+    assert [f.rule for f in report.warnings] == ["lint/shard-imbalance"]
+    # Evenly spread owners stay clean at the same probe count...
+    even = _plan("p")
+    for i in range(32):
+        even.add(_probe(_key(i), place_shard=i % 4), "p", LANE_DMA)
+    assert analyze_plan(even, segment_cache=cache).findings == []
+    # ...and below the probe-count gate the same skew is granularity, not
+    # an owner-map bug (one big segment trips 2x by pigeonhole).
+    small = _plan("p")
+    for i in range(31):
+        small.add(_probe(_key(i), place_shard=0), "p", LANE_DMA)
+    assert analyze_plan(small, segment_cache=cache).findings == []
+
+
 def test_lint_dangling_pin_after_release():
     plan = _plan("p")
     i = plan.add(_probe(_key(), pin=object(), payload=(0, "ell")), "p",
@@ -394,7 +416,7 @@ def test_every_finding_rule_is_cataloged():
         "lint/negative-bytes", "lint/zero-byte-transfer",
         "lint/miss-dst-tier", "lint/alloc-unreferenced",
         "lint/bad-placement", "lint/dangling-pin",
-        "lint/duplicate-key-conflict",
+        "lint/duplicate-key-conflict", "lint/shard-imbalance",
     }
     assert emitted == set(RULES)
 

@@ -353,3 +353,44 @@ def test_coalescing_threshold_derivation():
     assert TransferCoalescingPass.DEFAULT_MIN_BYTES == 1 << 18
     with pytest.raises(ValueError):
         TransferCoalescingPass(min_bytes=0)
+
+
+# ---- partition-aware autotune arm ------------------------------------------
+
+
+def test_autotune_partition_arm_prices_warm_ici():
+    """On a sharded cache the autotuner prices connectivity-clustered
+    owner maps by modeled warm-epoch ICI bytes and only keeps a cluster
+    count that strictly beats the CRC default."""
+    from repro.data import generate_sbm_graph, normalized_adjacency
+    from repro.io.tiers import ICI_RING
+
+    a = normalized_adjacency(generate_sbm_graph(
+        512, 4096, n_blocks=4, p_in=0.95, seed=0))
+    est = plan_memory_dense_features(a, a.n_rows, 32, float("inf"))
+    b = int(est.m_b + est.m_c + 0.6 * a.nbytes())
+    eng = ServingEngine(EngineConfig(
+        device_budget_bytes=b, cache_device_bytes=b, cache_shards=4,
+        ici_topology=ICI_RING, max_batch_features=32, clock=VirtualClock()))
+    eng.register_graph("g", a)
+    tuned = eng.autotune("g", width=32)
+    assert tuned.default_warm_ici_bytes > 0, \
+        "CRC owners on 4 ring shards must model some warm ICI traffic"
+    assert tuned.warm_ici_bytes <= tuned.default_warm_ici_bytes
+    if tuned.partition_clusters is not None:
+        assert tuned.partition_clusters > 1
+        assert tuned.warm_ici_bytes < tuned.default_warm_ici_bytes
+    # Installing round-trips the cluster count onto the graph's engine.
+    eng.install_schedule(tuned)
+    spg = eng._engines["g"]
+    if tuned.partition_clusters is None:
+        assert spg.partition is None
+    else:
+        assert spg.partition.n_clusters == tuned.partition_clusters
+
+
+def test_autotune_skips_partition_arm_without_sharded_cache(graph, budget):
+    tuned = make_engine(graph, budget).autotune("g")
+    assert tuned.partition_clusters is None
+    assert tuned.warm_ici_bytes == 0
+    assert tuned.default_warm_ici_bytes == 0

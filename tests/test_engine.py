@@ -841,3 +841,140 @@ def test_direct_requeue_deadline_not_instantly_expired(quickstart_graph):
     report = eng.run_batch()
     assert report.expired == []
     assert len(report.results) == 1
+
+
+# ---- partition-aware sharding (connectivity-clustered owner maps) --------
+
+@pytest.fixture(scope="module")
+def sbm_graph():
+    from repro.data import generate_sbm_graph, normalized_adjacency
+
+    a = normalized_adjacency(generate_sbm_graph(
+        512, 4096, n_blocks=4, p_in=0.95, seed=0))
+    a.validate()
+    return a
+
+
+def _partitioned_engine(a, clusters=8, **overrides):
+    from repro.io.tiers import ICI_RING
+
+    kw = dict(device_budget_bytes=_budget(a, width=32),
+              cache_device_bytes=_budget(a, width=32),
+              cache_shards=4, ici_topology=ICI_RING,
+              partition_shards=clusters, max_batch_features=32)
+    kw.update(overrides)
+    eng = ServingEngine(EngineConfig(**kw))
+    eng.register_graph("g", a)
+    return eng
+
+
+def _workload(a, seed=5, width=32, hidden=16):
+    rng = np.random.default_rng(seed)
+    h = rng.standard_normal((a.n_rows, width)).astype(np.float32)
+    w = [rng.standard_normal((width, hidden)).astype(np.float32)]
+    return h, w
+
+
+def test_partition_shards_end_to_end_outputs_bitexact(sbm_graph):
+    """partition_shards only moves brick ownership — every epoch's output
+    must be bit-identical to the CRC-owner default."""
+    a = sbm_graph
+    h, w = _workload(a)
+    crc = _partitioned_engine(a, clusters=0)
+    part = _partitioned_engine(a, clusters=8)
+    spg = part._engines["g"]
+    assert spg.partition is not None and spg.partition.n_clusters == 8
+    assert part.cache._owner_maps, \
+        "register_graph must install the owner map eagerly"
+    for _ in range(2):
+        crc.submit(InferenceRequest("g", h, w))
+        part.submit(InferenceRequest("g", h, w))
+        ref = crc.run_batch().results[0].output
+        got = part.run_batch().results[0].output
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_partition_off_without_sharded_cache(quickstart_graph):
+    """partition_shards on an unsharded cache is a no-op: CRC owners are
+    already correct and an all-zeros owner map would only add overhead."""
+    eng = _engine(quickstart_graph, partition_shards=8)
+    eng.register_graph("g", quickstart_graph)
+    assert eng._engines["g"].partition is None
+
+
+def test_partition_owner_map_survives_warm_start(sbm_graph, tmp_path):
+    a = sbm_graph
+    h, w = _workload(a)
+    donor = _partitioned_engine(a)
+    donor.submit(InferenceRequest("g", h, w))
+    cold = donor.run_batch()
+    donor.checkpoint_cache(str(tmp_path))
+
+    fresh = _partitioned_engine(a)
+    assert fresh.cache._owner_maps, \
+        "owner map must be installed before warm_start puts route bricks"
+    ws = fresh.warm_start(str(tmp_path))
+    assert ws.bricks > 0
+    # Every restored brick sits on the shard its owner map dictates.
+    for s, shard in enumerate(fresh.cache.shards):
+        for key in list(shard._device) + list(shard._host):
+            assert fresh.cache.owner_of(key) == s
+    fresh.submit(InferenceRequest("g", h, w))
+    first = fresh.run_batch()
+    assert first.uploaded_bytes == 0, \
+        "warm-started partitioned epoch must not re-stream wire bytes"
+    np.testing.assert_array_equal(np.asarray(first.results[0].output),
+                                  np.asarray(cold.results[0].output))
+
+
+def test_update_graph_keeps_partition_owner_maps(sbm_graph):
+    a = sbm_graph
+    h, w = _workload(a)
+    eng = _partitioned_engine(a)
+    eng.submit(InferenceRequest("g", h, w))
+    eng.run_batch()
+    part_before = eng._engines["g"].partition
+    rep = eng.update_graph("g", inserts=[(5, 300, 0.5), (6, 301, 0.25)])
+    assert rep.plans_updated >= 1
+    part_after = eng._engines["g"].partition
+    assert part_after is not None, "partition must survive edge deltas"
+    np.testing.assert_array_equal(part_after.cluster_to_shard,
+                                  part_before.cluster_to_shard)
+    assert eng.cache._owner_maps, \
+        "owner maps must be re-installed for the migrated plan"
+    # Exactness on the updated graph, vs a CRC engine serving it fresh.
+    ref_eng = _partitioned_engine(eng._graphs["g"], clusters=0)
+    eng.submit(InferenceRequest("g", h, w))
+    ref_eng.submit(InferenceRequest("g", h, w))
+    got = eng.run_batch().results[0].output
+    ref = ref_eng.run_batch().results[0].output
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_install_schedule_swaps_partition(sbm_graph):
+    from repro.core import TunedSchedule
+    from repro.core.autotune import DEFAULT_MIN_BYTES, DEFAULT_PASS_ORDER
+
+    a = sbm_graph
+    eng = _partitioned_engine(a, clusters=0)
+    assert eng._engines["g"].partition is None
+
+    def tuned(clusters):
+        return TunedSchedule(
+            graph="g", min_bytes=DEFAULT_MIN_BYTES,
+            pass_order=DEFAULT_PASS_ORDER, ell_buckets=None,
+            predicted_makespan_s=1.0, default_makespan_s=1.0,
+            partition_clusters=clusters)
+
+    eng.install_schedule(tuned(8))
+    spg = eng._engines["g"]
+    assert spg.partition is not None and spg.partition.n_clusters == 8
+    assert not spg._prepared, "cluster change must drop prepared plans"
+    h, w = _workload(a)
+    eng.submit(InferenceRequest("g", h, w))
+    out_part = eng.run_batch().results[0].output
+    eng.install_schedule(tuned(None))
+    assert eng._engines["g"].partition is None
+    eng.submit(InferenceRequest("g", h, w))
+    out_crc = eng.run_batch().results[0].output
+    np.testing.assert_array_equal(np.asarray(out_part), np.asarray(out_crc))

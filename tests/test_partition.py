@@ -1,0 +1,258 @@
+"""Connectivity clustering + cluster->shard mapping (sparse/partition.py).
+
+Covers the partition-aware-sharding tentpole invariants:
+  * LDG clustering — deterministic, near-uniform cluster sizes, and
+    community recovery on SBM graphs (the locality prior keeps contiguous
+    blocks together instead of round-robining seed rows);
+  * `map_clusters_to_shards` — nearest-first packing under the bounded-
+    imbalance cap, least-loaded fallback, validation errors;
+  * plan projection — `boundaries()` aligns RoBW segments to cluster
+    edges; `clusters_for_plan`/`owners_for_plan` majority votes;
+  * `refine` — delta re-clustering keeps untouched labels and the
+    cluster->shard map verbatim, validates shapes, changes the token.
+"""
+import numpy as np
+import pytest
+
+from repro.data import generate_sbm_graph, normalized_adjacency
+from repro.io.tiers import ICI_ALL_TO_ALL, ICI_RING
+from repro.sparse.formats import CSR
+from repro.sparse.partition import (
+    Partition,
+    map_clusters_to_shards,
+    partition_graph,
+)
+from repro.core.robw import robw_partition
+
+
+def _chain(n, dtype=np.float32):
+    """Path graph: row i links i-1 and i+1 — maximally bandable."""
+    rows, cols = [], []
+    for i in range(n):
+        for j in (i - 1, i + 1):
+            if 0 <= j < n:
+                rows.append(i)
+                cols.append(j)
+    indptr = np.zeros(n + 1, np.int64)
+    np.add.at(indptr, np.asarray(rows) + 1, 1)
+    order = np.lexsort((cols, rows))
+    return CSR(indptr=np.cumsum(indptr),
+               indices=np.asarray(cols, np.int64)[order],
+               data=np.ones(len(rows), dtype)[order], shape=(n, n))
+
+
+def _sbm(n=512, m=4096, blocks=4, seed=0):
+    return normalized_adjacency(
+        generate_sbm_graph(n, m, n_blocks=blocks, p_in=0.95, seed=seed))
+
+
+# ---- LDG clustering ------------------------------------------------------
+
+def test_partition_is_deterministic():
+    a = _sbm()
+    p1 = partition_graph(a, 8, n_shards=4)
+    p2 = partition_graph(a, 8, n_shards=4)
+    np.testing.assert_array_equal(p1.cluster_of, p2.cluster_of)
+    np.testing.assert_array_equal(p1.cluster_to_shard, p2.cluster_to_shard)
+    assert p1.token == p2.token != 0
+
+
+def test_cluster_sizes_near_uniform():
+    a = _sbm()
+    p = partition_graph(a, 8)
+    sizes = np.bincount(p.cluster_of, minlength=8)
+    capacity = -(-a.n_rows // 8)
+    assert sizes.max() <= capacity
+    assert sizes.min() >= 1
+
+
+def test_sbm_blocks_stay_pure():
+    """Each LDG cluster should be dominated by one SBM block — the
+    community-recovery property the warm-epoch ICI win rests on."""
+    n, blocks = 512, 4
+    a = _sbm(n=n, blocks=blocks)
+    p = partition_graph(a, blocks)
+    block_of = np.arange(n) // (n // blocks)
+    for c in range(p.n_clusters):
+        members = block_of[p.cluster_of == c]
+        if members.size == 0:
+            continue
+        purity = np.bincount(members).max() / members.size
+        assert purity >= 0.9, f"cluster {c} purity {purity:.2f}"
+
+
+def test_locality_prior_keeps_chain_contiguous():
+    """On a path graph the first rows have no labeled neighbors ahead of
+    them; the locality prior must keep runs together (few boundaries)
+    instead of round-robin seeding the first k rows into k clusters."""
+    a = _chain(64)
+    p = partition_graph(a, 4)
+    # Contiguous clustering => exactly k-1 label changes along the rows.
+    assert p.boundaries().size == 3
+    sizes = np.bincount(p.cluster_of, minlength=4)
+    assert sizes.max() - sizes.min() <= 1
+
+
+def test_partition_validates_and_clamps():
+    a = _chain(8)
+    with pytest.raises(ValueError, match="n_clusters"):
+        partition_graph(a, 0)
+    p = partition_graph(a, 100)         # clamped to n_rows
+    assert p.n_clusters == 8
+    assert p.n_shards == 1
+
+
+def test_empty_graph():
+    a = CSR(indptr=np.zeros(1, np.int64), indices=np.empty(0, np.int64),
+            data=np.empty(0, np.float32), shape=(0, 0))
+    p = partition_graph(a, 4)
+    assert p.n_rows == 0
+    assert p.boundaries().size == 0
+    assert "0 rows" in p.describe()
+
+
+# ---- cluster -> shard mapping --------------------------------------------
+
+def test_map_nearest_first_under_cap():
+    # Ring of 4, local shard 0: distance order is [0, 1, 3, 2] (hops
+    # [0, 1, 2, 1], ties toward the lower index). Four equal clusters at
+    # balance 1.75 (cap = 1.75 * total/4): shard 0 takes the first pair
+    # (2 <= 1.75? no — 2 units > 1.75 units cap), so one each lands on
+    # 0 and 1 first, then 3, then 2.
+    out = map_clusters_to_shards([10, 10, 10, 10], 4, topology=ICI_RING,
+                                 local_shard=0)
+    assert out.tolist() == [0, 1, 3, 2]
+
+
+def test_map_packs_local_surplus():
+    # Cap = 1.75 * 40/4 = 17.5: the local shard takes 10 + 7 = 17, the
+    # next cluster (10) must hop out — bounded imbalance, not winner-
+    # takes-all.
+    out = map_clusters_to_shards([10, 10, 7, 7, 3, 3], 4,
+                                 topology=ICI_RING, local_shard=0)
+    load = np.bincount(out, weights=np.array([10, 10, 7, 7, 3, 3]),
+                       minlength=4)
+    assert load[0] <= 1.75 * 40 / 4
+    assert load[0] == load.max(), "local shard fills first"
+    # Under the analyzer's 2x-mean lint threshold by construction.
+    assert load.max() <= 2 * load.sum() / 4
+
+
+def test_map_fallback_when_no_shard_fits():
+    # One giant cluster exceeds every cap: least-loaded fallback takes it.
+    out = map_clusters_to_shards([100, 1, 1], 2, balance=1.0)
+    assert set(out.tolist()) == {0, 1}
+
+
+def test_map_single_shard_and_validation():
+    assert map_clusters_to_shards([5, 5], 1).tolist() == [0, 0]
+    with pytest.raises(ValueError, match="local_shard"):
+        map_clusters_to_shards([5], 2, local_shard=2)
+    with pytest.raises(ValueError, match="balance"):
+        map_clusters_to_shards([5], 2, balance=0.5)
+
+
+# ---- plan projection -----------------------------------------------------
+
+def test_boundaries_align_robw_segments():
+    a = _sbm(n=256, m=2048, blocks=4)
+    p = partition_graph(a, 4)
+    bounds = set(p.boundaries().tolist())
+    plan = robw_partition(a, a.nbytes() // 6, align=1,
+                          boundaries=p.boundaries())
+    labels = p.cluster_of
+    for seg in plan.segments:
+        segment_labels = set(labels[seg.row_start:seg.row_end].tolist())
+        assert len(segment_labels) == 1 or not bounds, \
+            f"segment [{seg.row_start},{seg.row_end}) straddles a boundary"
+
+
+def test_owners_for_plan_majority_vote():
+    labels = np.array([0, 0, 1, 1], np.int64)
+    p = Partition(cluster_of=labels,
+                  cluster_to_shard=np.array([2, 3], np.int64),
+                  n_shards=4, row_nnz=np.array([5, 5, 1, 1], np.int64))
+
+    class _Seg:
+        def __init__(self, lo, hi):
+            self.row_start, self.row_end = lo, hi
+
+    class _Plan:
+        segments = [_Seg(0, 3), _Seg(3, 4)]
+
+    # Segment 0 spans both clusters; cluster 0 wins on nnz weight.
+    assert p.clusters_for_plan(_Plan) == [0, 1]
+    assert p.owners_for_plan(_Plan) == [2, 3]
+    # All-empty rows fall back to the row-count vote.
+    p0 = Partition(cluster_of=labels,
+                   cluster_to_shard=np.array([2, 3], np.int64),
+                   n_shards=4, row_nnz=np.zeros(4, np.int64))
+    assert p0.clusters_for_plan(_Plan) == [0, 1]
+
+
+def test_row_permutation_sorts_by_cluster():
+    labels = np.array([1, 0, 1, 0], np.int64)
+    p = Partition(cluster_of=labels,
+                  cluster_to_shard=np.array([0, 0], np.int64),
+                  n_shards=1, row_nnz=np.ones(4, np.int64))
+    perm = p.row_permutation()
+    assert np.all(np.diff(labels[perm]) >= 0)
+    assert perm.tolist() == [1, 3, 0, 2], "stable within clusters"
+
+
+# ---- refine (evolving graphs) --------------------------------------------
+
+def test_refine_keeps_untouched_labels_and_shard_map():
+    a = _sbm(n=256, m=2048, blocks=4)
+    p = partition_graph(a, 4, n_shards=4)
+    refined = p.refine(a, touched_rows=[0, 1, 2])
+    untouched = np.ones(256, bool)
+    untouched[:3] = False
+    np.testing.assert_array_equal(refined.cluster_of[untouched],
+                                  p.cluster_of[untouched])
+    np.testing.assert_array_equal(refined.cluster_to_shard,
+                                  p.cluster_to_shard)
+    assert refined.n_shards == p.n_shards
+
+
+def test_refine_relabels_touched_rows_to_neighbor_majority():
+    a = _chain(32)
+    p = partition_graph(a, 2)           # rows 0..15 -> c0, 16..31 -> c1
+    labels = p.cluster_of.copy()
+    # Force row 0 into the wrong cluster, then refine it back: its
+    # neighbor (row 1) holds the majority label.
+    wrong = Partition(cluster_of=np.where(np.arange(32) == 0,
+                                          labels[31], labels),
+                      cluster_to_shard=p.cluster_to_shard,
+                      n_shards=p.n_shards, row_nnz=p.row_nnz)
+    fixed = wrong.refine(a, touched_rows=[0])
+    assert fixed.cluster_of[0] == labels[1]
+    # Isolated touched rows (no neighbors) keep their current label.
+    iso = CSR(indptr=np.zeros(33, np.int64),
+              indices=np.empty(0, np.int64),
+              data=np.empty(0, np.float32), shape=(32, 32))
+    kept = wrong.refine(iso, touched_rows=[0])
+    assert kept.cluster_of[0] == wrong.cluster_of[0]
+
+
+def test_refine_validates_shapes_and_token_tracks_labels():
+    a = _chain(32)
+    b = _chain(16)
+    p = partition_graph(a, 2)
+    with pytest.raises(ValueError, match="rows"):
+        p.refine(b, touched_rows=[0])
+    with pytest.raises(IndexError, match="touched"):
+        p.refine(a, touched_rows=[99])
+    with pytest.raises(IndexError, match="touched"):
+        p.refine(a, touched_rows=[-1])
+    same = p.refine(a, touched_rows=[5])    # relabels to its own majority
+    assert (same.token == p.token) == bool(
+        np.array_equal(same.cluster_of, p.cluster_of))
+
+
+def test_shard_nnz_and_describe():
+    a = _sbm(n=256, m=2048, blocks=4)
+    p = partition_graph(a, 8, n_shards=4, topology=ICI_ALL_TO_ALL)
+    assert int(p.shard_nnz.sum()) == int(p.cluster_nnz.sum()) == a.nnz
+    d = p.describe()
+    assert "256 rows" in d and "8 clusters" in d and "4 shards" in d
